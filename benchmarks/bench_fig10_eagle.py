@@ -1,0 +1,89 @@
+"""Paper Fig. 10 (Appendix C): Hydra++ vs EAGLE — acceptance length and
+per-step wall time (EAGLE runs a full decoder layer per DRAFT POSITION;
+Hydra++ queries its extra layer once per step; the paper finds comparable
+end-to-end throughput despite EAGLE's higher acceptance)."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (CKPT_DIR, HEAD_STEPS, base_setup, csv_row,
+                               draft_setup, eval_prompts, timed_generate)
+from repro.core.eagle import (eagle_spec_step, eagle_train_loss,
+                              init_eagle_decode_state, init_eagle_params)
+from repro.core.trees import chain_tree
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optim import (adamw_update, clip_by_global_norm,
+                                  cosine_schedule, init_adamw)
+
+
+def _train_eagle(cfg, params, pipe, steps):
+    rng = jax.random.PRNGKey(9)
+    ep = init_eagle_params(rng, cfg)
+    path = os.path.join(CKPT_DIR, "eagle_tiny")
+    if os.path.exists(os.path.join(path, "arrays.npz")):
+        return load_checkpoint(path, ep)
+
+    @jax.jit
+    def step(ep, opt, batch):
+        (_, m), g = jax.value_and_grad(
+            lambda e: eagle_train_loss(e, params, cfg, batch),
+            has_aux=True)(ep)
+        g, _ = clip_by_global_norm(g, 1.0)
+        lr = cosine_schedule(opt.step, peak_lr=1e-3, warmup=30, total=steps)
+        ep, opt = adamw_update(g, opt, ep, lr)
+        return ep, opt, m
+
+    opt = init_adamw(ep)
+    for i, batch in enumerate(pipe.train_batches(steps)):
+        ep, opt, m = step(ep, opt, jnp.asarray(batch))
+        if i % 100 == 0:
+            print(f"# eagle {i}: loss={float(m['loss']):.3f} "
+                  f"acc={float(m['acc']):.3f}", flush=True)
+    save_checkpoint(path, ep)
+    return ep
+
+
+def run(max_new_tokens: int = 32, K: int = 4) -> list:
+    cfg, params, pipe = base_setup()
+    prompts = eval_prompts(1)
+    rows = []
+
+    # hydra++ (chain tree for apples-to-apples with EAGLE's chain draft)
+    c2, dp = draft_setup("hydra++")
+    tree = chain_tree(K)
+    tps, acc, _, _ = timed_generate(params, dp, c2, tree, prompts,
+                                    max_new_tokens=max_new_tokens)
+    rows.append(csv_row("fig10_hydra++_chain", 1e6 / max(tps, 1e-9),
+                        f"accept_len={acc:.3f};tok_per_s={tps:.2f}"))
+
+    # eagle
+    ep = _train_eagle(cfg, params, pipe, HEAD_STEPS)
+    rng = jax.random.PRNGKey(0)
+    state = init_eagle_decode_state(params, ep, cfg, prompts, 512, rng)
+    step = jax.jit(lambda p, d, st: eagle_spec_step(p, d, cfg, K, st))
+    jax.block_until_ready(step(params, ep, state).state.cache_len)  # compile
+    produced, steps_n, acc_sum = 1, 0, 0.0
+    t0 = time.time()
+    while produced < max_new_tokens:
+        res = step(params, ep, state)
+        state = res.state
+        jax.block_until_ready(state.cache_len)
+        n = int(np.asarray(res.n_emitted).min())
+        produced += n
+        acc_sum += float(np.asarray(res.n_emitted).mean())
+        steps_n += 1
+    wall = time.time() - t0
+    tps = produced / wall
+    rows.append(csv_row("fig10_eagle_chain", 1e6 / max(tps, 1e-9),
+                        f"accept_len={acc_sum / max(steps_n, 1):.3f};"
+                        f"tok_per_s={tps:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

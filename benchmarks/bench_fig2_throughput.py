@@ -1,0 +1,35 @@
+"""Paper Fig. 2: batch-size-1 decoding throughput + acceptance length for
+autoregressive / Medusa / Hydra / Hydra++ (greedy verification)."""
+from __future__ import annotations
+
+from benchmarks.common import (base_setup, csv_row, draft_setup,
+                               eval_prompts, timed_generate)
+from repro.core.trees import default_tree
+
+
+def run(max_new_tokens: int = 48) -> list:
+    cfg, params, _ = base_setup()
+    tree = default_tree(16, 4, 4)
+    prompts = eval_prompts(1)
+    rows = []
+
+    tps, acc, steps, _ = timed_generate(params, None, cfg, tree, prompts,
+                                        max_new_tokens=max_new_tokens,
+                                        use_speculative=False)
+    rows.append(csv_row("fig2_autoregressive", 1e6 / max(tps, 1e-9),
+                        f"tok_per_s={tps:.2f};accept_len=1.00"))
+    base_tps = tps
+
+    for variant in ("medusa", "hydra", "hydra++"):
+        c2, dp = draft_setup(variant)
+        tps, acc, steps, _ = timed_generate(params, dp, c2, tree, prompts,
+                                            max_new_tokens=max_new_tokens)
+        rows.append(csv_row(
+            f"fig2_{variant}", 1e6 / max(tps, 1e-9),
+            f"tok_per_s={tps:.2f};accept_len={acc:.3f};"
+            f"speedup_vs_ar={tps / base_tps:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

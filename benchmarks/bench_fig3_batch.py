@@ -1,0 +1,35 @@
+"""Paper Fig. 3: effect of batch size on throughput/latency for
+autoregressive / Medusa / Hydra / Hydra++ (batched inference, §6.2)."""
+from __future__ import annotations
+
+from benchmarks.common import (base_setup, csv_row, draft_setup,
+                               eval_prompts, timed_generate)
+from repro.core.trees import default_tree
+
+
+def run(batch_sizes=(1, 2, 4, 8), max_new_tokens: int = 32) -> list:
+    cfg, params, _ = base_setup()
+    rows = []
+    for B in batch_sizes:
+        prompts = eval_prompts(B)
+        # paper §4/§6.2: bigger batches favor smaller trees
+        tree = default_tree(16 if B <= 2 else 8, 4, 4)
+        tps, _, steps, _ = timed_generate(params, None, cfg, tree, prompts,
+                                          max_new_tokens=max_new_tokens,
+                                          use_speculative=False)
+        lat = steps and (1.0 / (tps / (B * 1.0))) * 1e3
+        rows.append(csv_row(f"fig3_ar_b{B}", 1e6 / max(tps, 1e-9),
+                            f"tok_per_s={tps:.2f}"))
+        for variant in ("medusa", "hydra", "hydra++"):
+            c2, dp = draft_setup(variant)
+            tps, acc, steps, _ = timed_generate(
+                params, dp, c2, tree, prompts,
+                max_new_tokens=max_new_tokens)
+            rows.append(csv_row(
+                f"fig3_{variant}_b{B}", 1e6 / max(tps, 1e-9),
+                f"tok_per_s={tps:.2f};accept_len={acc:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig. 5 (Appendix A.1): Hydra head training-objective ablation —
+data loss vs teacher distillation, each with/without NEFTune-style hidden
+noise. The paper finds teacher-only best and noise harmful."""
+from __future__ import annotations
+
+from benchmarks.common import (base_setup, csv_row, draft_setup,
+                               eval_prompts, timed_generate)
+from repro.core.trees import default_tree
+
+
+def run(max_new_tokens: int = 32) -> list:
+    cfg, params, _ = base_setup()
+    tree = default_tree(16, 4, 4)
+    prompts = eval_prompts(2)
+    rows = []
+    settings = [
+        ("data", 0.0), ("data", 5.0), ("distill", 0.0), ("distill", 5.0),
+    ]
+    for obj, noise in settings:
+        c2, dp = draft_setup("hydra", objective=obj, noise_alpha=noise)
+        tps, acc, _, _ = timed_generate(params, dp, c2, tree, prompts,
+                                        max_new_tokens=max_new_tokens)
+        tag = f"{obj}" + ("_noise" if noise else "")
+        rows.append(csv_row(f"fig5_hydra_{tag}", 1e6 / max(tps, 1e-9),
+                            f"accept_len={acc:.3f};tok_per_s={tps:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Fig. 6 (Appendix A.2): MLP-only vs PrefixMLP Hydra heads —
+does the extra context-aggregating decoder layer help?"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import (base_setup, csv_row, draft_setup,
+                               eval_prompts, timed_generate)
+from repro.configs.base import DraftConfig
+from repro.core.trees import default_tree
+
+
+def run(max_new_tokens: int = 32) -> list:
+    cfg, params, _ = base_setup()
+    tree = default_tree(16, 4, 4)
+    prompts = eval_prompts(2)
+    rows = []
+    # plain MLP hydra vs PrefixMLP hydra (same distill objective, depth 1)
+    for tag, dc in [
+        ("mlp", DraftConfig(kind="hydra", n_heads=4, n_mlp_layers=1)),
+        ("prefixmlp", DraftConfig(kind="hydra", n_heads=4, n_mlp_layers=1,
+                                  prefix_attention=True)),
+    ]:
+        import benchmarks.common as C
+        C.DRAFT_VARIANTS[f"_fig6_{tag}"] = (dc, "distill")
+        c2, dp = draft_setup(f"_fig6_{tag}")
+        tps, acc, _, _ = timed_generate(params, dp, c2, tree, prompts,
+                                        max_new_tokens=max_new_tokens)
+        rows.append(csv_row(f"fig6_{tag}", 1e6 / max(tps, 1e-9),
+                            f"accept_len={acc:.3f};tok_per_s={tps:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper Figs. 7–9 (§4, Appendix B): data-driven decoding-tree discovery —
+measured rank-acceptance statistics -> greedy proposal trees T_1..T_N ->
+throughput vs tree size, per draft variant and batch size. The starred
+(best) tree size should shrink as batch grows."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (base_setup, csv_row, draft_setup,
+                               eval_prompts, timed_generate)
+from repro.core.tree_search import (expected_accept_length, grow_trees,
+                                    measure_rank_acc)
+
+
+def run(variants=("medusa", "hydra", "hydra++"), batch_sizes=(1, 4),
+        sizes=(4, 8, 16, 24, 32), max_new_tokens: int = 24) -> list:
+    cfg, params, pipe = base_setup()
+    eval_toks = jnp.asarray(pipe.eval_batch(8)[:, :96])
+    rows = []
+    for variant in variants:
+        c2, dp = draft_setup(variant)
+        acc = measure_rank_acc(params, dp, c2, eval_toks, max_rank=8)
+        trees = grow_trees(acc, n_max=max(sizes), max_children=8)
+        by_size = {t.size: t for t in trees}
+        for B in batch_sizes:
+            prompts = eval_prompts(B)
+            best = (None, -1.0)
+            for s in sizes:
+                cand = [t for t in trees if t.size <= s]
+                if not cand:
+                    continue
+                tree = cand[-1]
+                tps, al, _, _ = timed_generate(
+                    params, dp, c2, tree, prompts,
+                    max_new_tokens=max_new_tokens)
+                ea = expected_accept_length(tree, acc)
+                rows.append(csv_row(
+                    f"fig7_{variant}_b{B}_T{tree.size}",
+                    1e6 / max(tps, 1e-9),
+                    f"tok_per_s={tps:.2f};accept_len={al:.3f};"
+                    f"pred_accept={ea:.3f}"))
+                if tps > best[1]:
+                    best = (tree.size, tps)
+            rows.append(csv_row(f"fig7_{variant}_b{B}_best",
+                                0.0, f"best_tree_size={best[0]};"
+                                f"tok_per_s={best[1]:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: interpret-mode allclose status + jnp-path
+wall-clock (CPU proxy; real perf characterization is the dry-run roofline,
+see benchmarks/roofline.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.linear_attn_chunk.kernel import linear_attn_chunk
+from repro.kernels.linear_attn_chunk.ref import linear_attn_ref
+from repro.kernels.tree_attention.kernel import tree_attention
+from repro.kernels.tree_attention.ref import tree_attention_ref
+
+
+def _timeit(fn, *args, n=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6  # us
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    r = lambda i, s: jax.random.normal(jax.random.fold_in(key, i), s)
+
+    # flash attention
+    B, Hq, Hkv, S, D = 1, 4, 2, 512, 64
+    q, k, v = r(0, (B, Hq, S, D)), r(1, (B, Hkv, S, D)), r(2, (B, Hkv, S, D))
+    o = flash_attention(q, k, v, interpret=True)
+    err = float(jnp.max(jnp.abs(o - flash_attention_ref(q, k, v))))
+    us = _timeit(lambda a, b, c: flash_attention_ref(a, b, c), q, k, v)
+    rows.append(csv_row("kernel_flash_attention", us,
+                        f"interpret_max_err={err:.2e};S={S}"))
+
+    # tree attention
+    T = 16
+    tk, tv = r(3, (B, Hkv, T, D)), r(4, (B, Hkv, T, D))
+    qt = r(5, (B, Hq, T, D))
+    tm = jnp.tril(jnp.ones((T, T), bool))
+    lens = jnp.array([S - T], jnp.int32)
+    o = tree_attention(qt, k, v, tk, tv, tm, lens, bk=128, interpret=True)
+    err = float(jnp.max(jnp.abs(
+        o - tree_attention_ref(qt, k, v, tk, tv, tm, lens))))
+    us = _timeit(lambda a: tree_attention_ref(a, k, v, tk, tv, tm, lens), qt)
+    rows.append(csv_row("kernel_tree_attention", us,
+                        f"interpret_max_err={err:.2e};T={T};S={S}"))
+
+    # linear attention chunk
+    H, dk, dv = 4, 64, 64
+    ql, kl = r(6, (B, H, S, dk)), r(7, (B, H, S, dk))
+    vl = r(8, (B, H, S, dv))
+    w = -jnp.exp(r(9, (B, H, S, dk)) * 0.5)
+    u = r(10, (H, dk)) * 0.1
+    o = linear_attn_chunk(ql, kl, vl, w, u, chunk=64, interpret=True)
+    err = float(jnp.max(jnp.abs(o - linear_attn_ref(ql, kl, vl, w, u))))
+    us = _timeit(lambda a: linear_attn_ref(a, kl, vl, w, u), ql)
+    rows.append(csv_row("kernel_linear_attn_chunk", us,
+                        f"interpret_max_err={err:.2e};S={S}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

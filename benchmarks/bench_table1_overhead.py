@@ -1,0 +1,74 @@
+"""Paper Table 1 (Appendix D): overhead breakdown — time spent in prefix
+attention and in each draft head per speculative step, vs the base-model
+step itself."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import base_setup, csv_row, draft_setup, eval_prompts
+from repro.core.heads import draft_tree_tokens, head_logits, prefix_forward
+from repro.core.trees import default_tree
+from repro.models.model import forward, init_cache
+
+
+def _time(fn, *args, n=20, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.time() - t0) / n * 1e3  # ms
+
+
+def run() -> list:
+    cfg, params, _ = base_setup()
+    tree = default_tree(16, 4, 4)
+    prompts = eval_prompts(1)
+    rows = []
+    for variant in ("medusa", "hydra++"):
+        c2, dp = draft_setup(variant)
+        B, P = prompts.shape
+        pos = jnp.broadcast_to(jnp.arange(P), (B, P))
+        cache = init_cache(c2, B, 256)
+        out = forward(params, c2, prompts, pos, mode="full", cache=cache)
+        h = out.hidden[:, -1]
+        E = params["embed"]
+
+        # base verify step (the 28ms row in the paper)
+        cl = jnp.full((B,), P, jnp.int32)
+        tm = jnp.asarray(tree.ancestor_mask)
+        tpos = cl[:, None] + jnp.asarray(tree.depth)[None, :]
+        toks0 = jnp.zeros((B, tree.size), jnp.int32)
+        vstep = jax.jit(lambda t: forward(params, c2, t, tpos, mode="verify",
+                                          cache=out.cache, cache_len=cl,
+                                          tree_mask=tm).logits)
+        ms = _time(vstep, toks0)
+        rows.append(csv_row(f"table1_{variant}_base_verify", ms * 1e3,
+                            f"ms={ms:.2f}"))
+
+        if "prefix" in dp:
+            pf = jax.jit(lambda hh: prefix_forward(dp, c2, hh, pos)[0])
+            ms = _time(pf, out.hidden)
+            rows.append(csv_row(f"table1_{variant}_prefix_attn", ms * 1e3,
+                                f"ms={ms:.2f}"))
+        for i in range(c2.draft.n_heads):
+            path_embs = jnp.zeros((B, i + 1, c2.d_model))
+            hfn = jax.jit(lambda hh, pe, i=i: head_logits(dp, c2, params, i,
+                                                          hh, pe))
+            ms = _time(hfn, h, path_embs)
+            rows.append(csv_row(f"table1_{variant}_head{i + 1}", ms * 1e3,
+                                f"ms={ms:.2f}"))
+        dfn = jax.jit(lambda hh, lt: draft_tree_tokens(dp, c2, params, tree,
+                                                       hh, lt))
+        ms = _time(dfn, h, prompts[:, -1])
+        rows.append(csv_row(f"table1_{variant}_full_draft_tree", ms * 1e3,
+                            f"ms={ms:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

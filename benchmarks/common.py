@@ -1,0 +1,133 @@
+"""Shared benchmark substrate.
+
+Trains (once, checkpointed under results/ckpt) the container-scale Vicuna
+stand-in base model on the synthetic conversation corpus, plus the three
+draft-model variants the paper compares (§5, §6):
+
+  medusa   — sequentially-independent heads, 1-layer MLP, data loss
+  hydra    — sequentially-dependent heads, 1-layer MLP, data loss  (§3)
+  hydra++  — sequentially-dependent, 4-layer MLP, teacher-distillation
+             loss, PrefixAttention                                  (§3.1)
+
+Every benchmark reports CSV rows "name,us_per_call,derived" per run.py's
+contract; `derived` carries the figure-specific metric (acceptance length,
+tokens/s, MT-proxy score, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import DraftConfig
+from repro.core.heads import init_draft_params
+from repro.core.trees import TreeSpec, default_tree
+from repro.data.synthetic import DataPipeline, MarkovSpec
+from repro.models.model import init_params
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.trainer import TrainConfig, train_base, train_heads
+
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "ckpt")
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") == "1"
+
+BASE_STEPS = 150 if FAST else 400
+HEAD_STEPS = 200 if FAST else 600
+
+DRAFT_VARIANTS = {
+    "medusa": (DraftConfig(kind="medusa", n_heads=4, n_mlp_layers=1),
+               "data"),
+    "hydra": (DraftConfig(kind="hydra", n_heads=4, n_mlp_layers=1),
+              "data"),
+    "hydra++": (DraftConfig(kind="hydra", n_heads=4, n_mlp_layers=4,
+                            prefix_attention=True), "distill"),
+}
+
+
+@lru_cache(maxsize=1)
+def base_setup():
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+    spec = MarkovSpec(vocab_size=cfg.vocab_size, branch=4, peak=0.7, seed=0)
+    pipe = DataPipeline(spec, seq_len=128, batch_size=16, n_train=256,
+                        n_eval=32)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    path = os.path.join(CKPT_DIR, "base_tiny")
+    if os.path.exists(os.path.join(path, "arrays.npz")):
+        params = load_checkpoint(path, params)
+    else:
+        tc = TrainConfig(total_steps=BASE_STEPS, warmup=30, log_every=100)
+        params, _ = train_base(params, cfg, tc, pipe.train_batches(
+            BASE_STEPS))
+        save_checkpoint(path, params)
+    return cfg, params, pipe
+
+
+def draft_setup(variant: str, *, steps: int | None = None,
+                objective: str | None = None, noise_alpha: float = 0.0,
+                tag: str | None = None):
+    """Returns (cfg_with_draft, draft_params) — trained & checkpointed."""
+    cfg, params, pipe = base_setup()
+    dc, obj = DRAFT_VARIANTS[variant]
+    objective = objective or obj
+    steps = steps or HEAD_STEPS
+    c2 = dataclasses.replace(cfg, draft=dc)
+    rng = jax.random.PRNGKey(7)
+    dp = init_draft_params(rng, c2)
+    tag = tag or f"{variant}_{objective}" + (
+        f"_noise{noise_alpha:g}" if noise_alpha else "")
+    path = os.path.join(CKPT_DIR, f"heads_{tag}")
+    if os.path.exists(os.path.join(path, "arrays.npz")):
+        dp = load_checkpoint(path, dp)
+    else:
+        tc = TrainConfig(total_steps=steps, warmup=30, log_every=100)
+        dp, _ = train_heads(dp, params, c2, tc, pipe.train_batches(steps),
+                            objective=objective, noise_alpha=noise_alpha,
+                            rng=rng)
+        save_checkpoint(path, dp)
+    return c2, dp
+
+
+def eval_prompts(n: int, length: int = 32):
+    _, _, pipe = base_setup()
+    return jnp.asarray(pipe.eval_batch(n)[:, :length])
+
+
+def timed_generate(params, dp, cfg, tree, prompts, *, max_new_tokens=48,
+                   criterion="greedy", use_speculative=True, **kw):
+    """Returns (tokens/s wall, tokens/step acceptance, steps)."""
+    from repro.core.speculative import generate
+    # warm-up/compile
+    _ = generate(params, dp, cfg, tree, prompts, max_new_tokens=4,
+                 max_len=512, criterion=criterion,
+                 use_speculative=use_speculative, **kw)
+    t0 = time.time()
+    toks, steps, acc = generate(params, dp, cfg, tree, prompts,
+                                max_new_tokens=max_new_tokens, max_len=512,
+                                criterion=criterion,
+                                use_speculative=use_speculative, **kw)
+    wall = time.time() - t0
+    B = prompts.shape[0]
+    n_tokens = float(jnp.sum(jnp.asarray(acc))) if use_speculative else \
+        steps * B
+    return n_tokens / wall, float(jnp.mean(jnp.asarray(acc))), steps, toks
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    return row
+
+
+def quality_proxy_nll(params, cfg, tokens) -> float:
+    """Base-model NLL of generated continuations — stands in for the
+    paper's LLM-judge quality score (lower = more base-model-like)."""
+    from repro.core.distill import lm_loss
+    toks = jnp.asarray(np.maximum(np.asarray(tokens), 0))[:, :64]
+    loss, m = lm_loss(params, cfg, toks)
+    return float(m["nll"])

@@ -1,0 +1,74 @@
+"""Render the roofline table from results/dryrun/*.json (deliverable g).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+COLS = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+        "collective_s", "bottleneck", "memory_s_pallas_ideal",
+        "useful_flops_ratio", "peak_bytes"]
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt(r, k):
+    v = r.get(k)
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if k.endswith("_s") or k == "useful_flops_ratio":
+            return f"{v:.3g}"
+        return f"{v:.3g}"
+    if k == "peak_bytes" and isinstance(v, (int, float)):
+        return f"{v / 2**30:.1f}Gi"
+    return str(v)
+
+
+def render(markdown: bool = True, mesh: str | None = None) -> str:
+    recs = load_records(mesh)
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(COLS) + " |")
+        lines.append("|" + "---|" * len(COLS))
+        for r in recs:
+            if r.get("status") == "skip":
+                lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                             f"skip ({r.get('reason','')}) |" +
+                             " - |" * (len(COLS) - 4))
+            else:
+                lines.append("| " + " | ".join(fmt(r, c) for c in COLS)
+                             + " |")
+    else:
+        lines.append(",".join(COLS))
+        for r in recs:
+            lines.append(",".join(fmt(r, c) for c in COLS))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    print(render(markdown=args.markdown, mesh=args.mesh))
+
+
+if __name__ == "__main__":
+    main()

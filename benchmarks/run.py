@@ -1,0 +1,56 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig2,kernels
+
+Prints ``name,us_per_call,derived`` CSV rows. Draft/base checkpoints are
+trained on first use and cached under results/ckpt (set
+REPRO_BENCH_FAST=0 for the longer training budget).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+SECTIONS = [
+    ("kernels", "benchmarks.bench_kernels"),
+    ("fig2", "benchmarks.bench_fig2_throughput"),
+    ("fig3", "benchmarks.bench_fig3_batch"),
+    ("fig4", "benchmarks.bench_fig4_typical"),
+    ("fig5", "benchmarks.bench_fig5_objectives"),
+    ("fig6", "benchmarks.bench_fig6_prefix"),
+    ("table1", "benchmarks.bench_table1_overhead"),
+    ("fig7", "benchmarks.bench_fig7_trees"),
+    ("table2", "benchmarks.bench_table2_specbench"),
+    ("fig10", "benchmarks.bench_fig10_eagle"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, module in SECTIONS:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ({module}) ---", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {[f[0] for f in failures]}")
+
+
+if __name__ == "__main__":
+    main()

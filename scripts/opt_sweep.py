@@ -1,0 +1,24 @@
+"""Optimized-defaults sweep -> results/dryrun_opt (baselines preserved in
+results/dryrun). Differences vs baseline: ragged-KV replication + seq-sharded
+cache + grouped SSD (framework defaults now), plus pad_q_heads_to=16 for the
+ragged-head archs (qwen/minitron/starcoder/gemma/chameleon...)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+from repro.configs import get_config, list_configs, INPUT_SHAPES
+from repro.launch.dryrun import run_one
+
+OUT = "results/dryrun_opt"
+for arch in [a for a in list_configs() if a != "vicuna-tiny"]:
+    cfg = get_config(arch)
+    if cfg.arch_type in ("dense", "vlm", "audio") or cfg.moe:
+        mp = 16
+        if cfg.n_heads % mp and not cfg.mla:
+            cfg = dataclasses.replace(cfg, pad_q_heads_to=mp)
+    for shape in INPUT_SHAPES:
+        f = os.path.join(OUT, f"{arch}__{shape}__pod16x16.json")
+        if os.path.exists(f):
+            import json
+            if json.load(open(f)).get("status") in ("ok", "skip"):
+                continue
+        run_one(arch, shape, False, out_dir=OUT, cfg=cfg)

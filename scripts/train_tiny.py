@@ -1,0 +1,30 @@
+import time, dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.configs.base import DraftConfig
+from repro.models.model import init_params
+from repro.core.heads import init_draft_params
+from repro.core.trees import default_tree
+from repro.core.speculative import generate
+from repro.data.synthetic import MarkovSpec, DataPipeline
+from repro.training.trainer import TrainConfig, train_base, train_heads
+from repro.training.checkpoint import save_checkpoint
+
+key = jax.random.PRNGKey(0)
+cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+spec = MarkovSpec(vocab_size=cfg.vocab_size, branch=4, peak=0.7, seed=0)
+pipe = DataPipeline(spec, seq_len=128, batch_size=16, n_train=256, n_eval=32)
+params = init_params(key, cfg)
+tc = TrainConfig(total_steps=300, warmup=30, log_every=100)
+params, m = train_base(params, cfg, tc, pipe.train_batches(300))
+save_checkpoint("/root/repo/results/ckpt/base_tiny", params)
+print("base saved", flush=True)
+for kind, obj in [("medusa","data"), ("hydra","data")]:
+    c2 = dataclasses.replace(cfg, draft=DraftConfig(kind=kind, n_heads=4, n_mlp_layers=1))
+    dp = init_draft_params(jax.random.fold_in(key,1), c2)
+    tc2 = TrainConfig(total_steps=300, warmup=30, log_every=100)
+    dp, _ = train_heads(dp, params, c2, tc2, pipe.train_batches(300), objective=obj)
+    save_checkpoint(f"/root/repo/results/ckpt/heads_{kind}_tiny", dp)
+    tree = default_tree(16,4,4)
+    prompt = jnp.asarray(pipe.eval_batch(4)[:, :32])
+    toks, steps, acc = generate(params, dp, c2, tree, prompt, max_new_tokens=48, max_len=512)
+    print(f"{kind}: acceptance length = {float(acc.mean()):.3f} (steps {steps})", flush=True)

@@ -1,0 +1,3 @@
+from repro.configs.base import (DraftConfig, InputShape, INPUT_SHAPES,
+                                MLAConfig, MoEConfig, ModelConfig, SSMConfig,
+                                get_config, list_configs, register)

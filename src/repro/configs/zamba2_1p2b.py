@@ -1,0 +1,21 @@
+"""Zamba2-1.2B — Mamba2 backbone + shared attention blocks [arXiv:2411.15242]."""
+from repro.configs.base import DraftConfig, ModelConfig, SSMConfig, register
+
+ZAMBA2_1P2B = register(ModelConfig(
+    name="zamba2-1.2b",
+    arch_type="hybrid",
+    source="arXiv:2411.15242",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    block_kind="mamba2",
+    hybrid_attn_every=6,          # shared attn+MLP block applied every 6 mamba layers
+    ssm=SSMConfig(d_state=64, expand=2, head_dim=64, conv_width=4, chunk_size=64),
+    max_seq_len=4096,
+    draft=DraftConfig(kind="hydra++", n_heads=4, n_mlp_layers=4,
+                      prefix_attention=False),  # chain speculation (see DESIGN §4)
+))

@@ -1,0 +1,140 @@
+"""Draft-head training objectives (paper §5, §3.1, Appendix A).
+
+* data loss      — CE against the corpus next-tokens (Medusa's objective)
+* teacher loss   — self-distillation: CE against the FROZEN base model's
+                   next-token distribution (Hydra++/DistillSpec; App. A.1)
+* NEFTune noise  — optional uniform noise on the base hidden states,
+                   scale alpha/sqrt(S·d) (the App. A ablation — found
+                   harmful in the paper, reproduced in bench_fig5)
+
+Head alignment (0-based head j): at position t it receives h_t and the
+embeddings of x_{t+1..t+j+1}, and predicts x_{t+j+2}; the teacher
+distribution for that target is the base model's logits at position t+j+1.
+
+The base model is always FROZEN (stop_gradient) — only draft params train.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.heads import head_logits, prefix_forward
+from repro.models.model import forward
+
+
+def head_train_loss(draft_params, base_params, cfg: ModelConfig, tokens,
+                    *, objective: str = "data", noise_alpha: float = 0.0,
+                    rng: Optional[jnp.ndarray] = None):
+    """tokens: (B, S). Returns (scalar loss, metrics dict)."""
+    assert objective in ("data", "distill")
+    B, S = tokens.shape
+    K = cfg.draft.n_heads
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    base_out = forward(base_params, cfg, tokens, pos, mode="full",
+                       want_logits=(objective == "distill"))
+    h = jax.lax.stop_gradient(base_out.hidden)            # frozen base
+    if noise_alpha > 0.0:
+        assert rng is not None
+        d = cfg.d_model
+        noise = jax.random.uniform(rng, h.shape, jnp.float32, -1.0, 1.0)
+        h = h + (noise_alpha / jnp.sqrt(S * d)) * noise.astype(h.dtype)
+    if "prefix" in draft_params:                          # trainable
+        h, _, _ = prefix_forward(draft_params, cfg, h, pos)
+    E = jax.lax.stop_gradient(base_params["embed"])[tokens]
+
+    total = jnp.zeros((), jnp.float32)
+    metrics = {}
+    for j in range(K):
+        Lmax = S - (j + 2)
+        h_in = h[:, :Lmax]
+        path = jnp.stack([E[:, 1 + m:1 + m + Lmax] for m in range(j + 1)],
+                         axis=2)
+        lg = head_logits(draft_params, cfg, base_params, j, h_in, path)
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        if objective == "data":
+            tgt = tokens[:, j + 2:j + 2 + Lmax]
+            nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+            loss_j = nll.mean()
+            acc_j = (jnp.argmax(lg, -1) == tgt).mean()
+        else:
+            teacher = jax.lax.stop_gradient(
+                base_out.logits[:, j + 1:j + 1 + Lmax])
+            tprob = jax.nn.softmax(teacher, axis=-1)
+            loss_j = -(tprob * logp).sum(-1).mean()
+            acc_j = (jnp.argmax(lg, -1) == jnp.argmax(teacher, -1)).mean()
+        total = total + loss_j
+        metrics[f"head{j}_loss"] = loss_j
+        metrics[f"head{j}_acc"] = acc_j
+    loss = total / K
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, *, logit_chunk: int = 256):
+    """Standard next-token CE for base-model pretraining; returns
+    (loss, metrics). Adds the MoE router aux loss when present.
+
+    The CE is computed in sequence chunks so the full (B, S, V) logits are
+    never materialized — at V=256k / S=4k that tensor is terabytes."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = forward(params, cfg, tokens, pos, mode="full", want_logits=False)
+    h = out.hidden                                         # (B, S, d)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"]).astype(jnp.float32)
+    # targets: next token; last position masked out
+    tgt = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    valid = jnp.arange(S)[None, :] < (S - 1)
+
+    c = logit_chunk if S % logit_chunk == 0 else S
+    nc = S // c
+    h_c = h.reshape(B, nc, c, -1).swapaxes(0, 1)           # (nc, B, c, d)
+    t_c = tgt.reshape(B, nc, c).swapaxes(0, 1)
+    v_c = valid.reshape(1, nc, c).swapaxes(0, 1)
+
+    def body(carry, xs):
+        nll_sum, hit_sum = carry
+        hc, tc, vc = xs
+        lg = hc.astype(jnp.float32) @ unembed              # (B, c, V)
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(lp, tc[..., None], axis=-1)[..., 0]
+        hit = (jnp.argmax(lg, -1) == tc)
+        nll_sum = nll_sum + jnp.where(vc, nll, 0.0).sum()
+        hit_sum = hit_sum + jnp.where(vc, hit, False).sum()
+        return (nll_sum, hit_sum), None
+
+    (nll_sum, hit_sum), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (h_c, t_c, v_c))
+    denom = B * (S - 1)
+    nll_mean = nll_sum / denom
+    loss = nll_mean + out.aux_loss
+    acc = hit_sum / denom
+    return loss, {"loss": loss, "nll": nll_mean, "acc": acc,
+                  "aux": out.aux_loss}
+
+
+def masked_prediction_loss(params, cfg: ModelConfig, features, targets,
+                           mask):
+    """HuBERT-style masked cluster prediction for the encoder-only arch.
+
+    features: (B, S, d) frame embeddings (frontend stub); targets: (B, S)
+    cluster ids; mask: (B, S) bool — positions replaced by the learned mask
+    embedding and scored."""
+    B, S, _ = features.shape
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = jnp.where(mask[..., None], params["mask_embed"][None, None, :],
+                  features.astype(jnp.dtype(cfg.dtype)))
+    out = forward(params, cfg, x, pos, mode="full")
+    logp = jax.nn.log_softmax(out.logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1)
+    loss = jnp.where(mask, nll, 0.0).sum() / denom
+    acc = (jnp.where(mask, jnp.argmax(out.logits, -1) == targets, False)
+           .sum() / denom)
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,249 @@
+"""EAGLE-style draft model (paper Appendix C, Li et al. 2024) — the
+concurrent sequentially-dependent approach the paper compares against in
+Fig. 10.
+
+Differences from Hydra heads (paper App. C):
+  * ONE draft module (a full transformer decoder layer), not K MLPs;
+  * it autoregressively predicts BOTH the next token and an estimate of the
+    base model's next hidden state, feeding its own hidden estimate back —
+    so later draft positions attend through the draft layer (full
+    self-attention per candidate position, vs Hydra's single prefix-attn
+    query per step — the overhead difference the paper measures).
+
+Chain drafting (K candidates per step). Input at each draft position is
+fc([E(token); hidden]) where `hidden` is the base model's hidden state for
+committed positions and the EAGLE layer's own output for speculated ones.
+The draft layer keeps its own KV cache over the whole generated stream
+(stored in DecodeState.prefix_k/v — same slot the Hydra++ prefix layer
+uses; a model has one or the other).
+
+Training (teacher-forced, frozen base): at position t the input is
+fc([E(x_{t+1}); h_t]); targets are the next-next token x_{t+2} (CE through
+the base unembedding) and the next hidden state h_{t+1} (smooth-L1),
+mirroring EAGLE's joint objective.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import AttnInputs, gqa_fwd, init_gqa
+from repro.models.layers import dense_init, init_mlp, mlp_fwd, rms_norm
+
+
+def init_eagle_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "fc": dense_init(k1, 2 * d, d, dtype),
+        "prefix": {                       # decoder layer (same as hydra++)
+            "norm1": jnp.zeros((d,), dtype),
+            "norm2": jnp.zeros((d,), dtype),
+            "attn": init_gqa(k2, cfg, dtype),
+            "mlp": init_mlp(k3, d, cfg.d_ff, dtype),
+        },
+        "out_norm": jnp.zeros((d,), dtype),
+    }
+
+
+def _eagle_layer(dp, cfg, z, positions, cache_k, cache_v, cache_len):
+    p = dp["prefix"]
+    ai = AttnInputs(q_pos=positions, cache_k=cache_k, cache_v=cache_v,
+                    cache_len=cache_len, tree_mask=None,
+                    window=jnp.int32(0), causal=True)
+    a, nk, nv = gqa_fwd(p["attn"], cfg, rms_norm(z, p["norm1"], cfg.rms_eps),
+                        ai)
+    h = z + a
+    h = h + mlp_fwd(p["mlp"], rms_norm(h, p["norm2"], cfg.rms_eps))
+    return h, nk, nv
+
+
+def eagle_train_loss(dp, base_params, cfg: ModelConfig, tokens, *,
+                     hidden_coef: float = 0.1):
+    """Joint CE + hidden-regression objective (teacher-forced)."""
+    from repro.models.model import forward
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    base = forward(base_params, cfg, tokens, pos, mode="full",
+                   want_logits=False)
+    h = jax.lax.stop_gradient(base.hidden)                 # (B,S,d)
+    E = jax.lax.stop_gradient(base_params["embed"])[tokens]
+
+    # input at t: [E(x_{t+1}); h_t]  for t = 0..S-3
+    L = S - 2
+    z = jnp.concatenate([E[:, 1:1 + L], h[:, :L]], axis=-1) @ dp["fc"]
+    hhat, _, _ = _eagle_layer(dp, cfg, z, pos[:, :L], None, None, None)
+    hhat = rms_norm(hhat, dp["out_norm"], cfg.rms_eps)
+
+    unembed = (base_params["embed"].T if cfg.tie_embeddings
+               else base_params["lm_head"])
+    logits = hhat.astype(jnp.float32) @ jax.lax.stop_gradient(
+        unembed).astype(jnp.float32)
+    tgt = tokens[:, 2:2 + L]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0].mean()
+    # hidden regression vs h_{t+1} (smooth-L1)
+    diff = (hhat - h[:, 1:1 + L]).astype(jnp.float32)
+    hub = jnp.where(jnp.abs(diff) < 1.0, 0.5 * diff * diff,
+                    jnp.abs(diff) - 0.5).mean()
+    loss = ce + hidden_coef * hub
+    acc = (jnp.argmax(logits, -1) == tgt).mean()
+    return loss, {"loss": loss, "ce": ce, "hidden_l1": hub, "acc": acc}
+
+
+class EagleDraft(NamedTuple):
+    tokens: jnp.ndarray      # (B, K+1) chain incl. root
+    logp: jnp.ndarray        # (B, K+1)
+    new_k: jnp.ndarray       # updated draft-layer cache
+    new_v: jnp.ndarray
+
+
+def eagle_draft_chain(dp, cfg: ModelConfig, base_params, K: int, h_last,
+                      last_tok, cache_k, cache_v, cache_len) -> EagleDraft:
+    """Draft a K-token chain. h_last: (B, d) base hidden of the last
+    committed token; the draft layer's own cache covers committed positions
+    [0, cache_len)."""
+    B = last_tok.shape[0]
+    E = base_params["embed"]
+    unembed = (base_params["embed"].T if cfg.tie_embeddings
+               else base_params["lm_head"])
+
+    toks = [last_tok]
+    lps = [jnp.zeros((B,), jnp.float32)]
+    h = h_last
+    tok = last_tok
+    ck, cv = cache_k, cache_v
+    for i in range(K):
+        z = jnp.concatenate([E[tok], h.astype(E.dtype)], axis=-1) @ dp["fc"]
+        posi = (cache_len + i)[:, None]
+        hh, ck, cv = _eagle_layer(dp, cfg, z[:, None, :], posi, ck, cv,
+                                  cache_len + i)
+        hh = rms_norm(hh[:, 0], dp["out_norm"], cfg.rms_eps)
+        logits = hh.astype(jnp.float32) @ unembed.astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        lps.append(jnp.take_along_axis(lp, tok[:, None], 1)[:, 0])
+        toks.append(tok)
+        h = hh
+    return EagleDraft(jnp.stack(toks, 1), jnp.stack(lps, 1), ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# full speculative step with an EAGLE draft (chain; paper Fig. 10 setup)
+# ---------------------------------------------------------------------------
+
+
+def eagle_spec_step(params, dp, cfg: ModelConfig, K: int, state, *,
+                    criterion: str = "greedy", temperature: float = 0.7,
+                    epsilon: float = 0.15):
+    """Mirrors core.speculative.spec_decode_step with an EAGLE draft model.
+    state: core.speculative.DecodeState (prefix_k/v hold the EAGLE layer's
+    cache). Returns core.speculative.StepResult."""
+    from repro.core.speculative import DecodeState, StepResult, PAD_TOKEN
+    from repro.core.trees import chain_tree
+    from repro.core.verify import greedy_verify, typical_verify
+    from repro.models.model import forward
+    from repro.serving.cache import commit_cache, commit_prefix_cache
+
+    B = state.last_token.shape[0]
+    tree = chain_tree(K)
+    T = tree.size
+
+    # 1. draft (the draft-time eagle cache is discarded; committed entries
+    #    are rebuilt below from TRUE base hiddens)
+    draft = eagle_draft_chain(dp, cfg, params, K, state.last_hidden,
+                              state.last_token, state.prefix_k,
+                              state.prefix_v, state.cache_len)
+    tokens = draft.tokens                                   # (B, K+1)
+
+    # 2. verify
+    positions = state.cache_len[:, None] + jnp.arange(T)[None, :]
+    out = forward(params, cfg, tokens, positions, mode="verify",
+                  cache=state.cache, cache_len=state.cache_len,
+                  tree_mask=None)
+
+    # 3. accept
+    rng, sub = jax.random.split(state.rng)
+    if criterion == "greedy":
+        res = greedy_verify(tree, tokens, out.logits)
+    else:
+        res = typical_verify(tree, tokens, out.logits, sub,
+                             temperature=temperature, epsilon=epsilon)
+
+    # 4. commit base cache
+    new_cache = commit_cache(out.cache, state.cache_len, res.path_nodes,
+                             res.n_accept)
+    D1 = res.path_nodes.shape[1]
+    bidx = jnp.arange(B)[:, None]
+    acc_hidden = out.hidden[bidx, res.path_nodes]           # (B, D1, d)
+
+    # 5. rebuild eagle cache entries for accepted positions from true
+    #    base hiddens: input_j = fc([E(tok_j); h_{j-1}])
+    E = params["embed"]
+    tok_path = tokens[bidx, res.path_nodes]                 # (B, D1)
+    h_prev = jnp.concatenate([state.last_hidden[:, None, :],
+                              acc_hidden[:, :-1, :]], axis=1)
+    z = jnp.concatenate([E[tok_path], h_prev.astype(E.dtype)],
+                        axis=-1) @ dp["fc"]
+    ppos = state.cache_len[:, None] + jnp.arange(D1)[None, :]
+    _, nk, nv = _eagle_layer(dp, cfg, z, ppos, state.prefix_k,
+                             state.prefix_v, state.cache_len)
+    pk, pv = commit_prefix_cache(nk, nv, state.cache_len, res.path_nodes)
+
+    h_next = jnp.take_along_axis(acc_hidden, res.n_accept[:, None, None],
+                                 axis=1)[:, 0]
+
+    j = jnp.arange(D1)[None, :]
+    shifted = jnp.concatenate([tok_path[:, 1:],
+                               jnp.full((B, 1), PAD_TOKEN, jnp.int32)], 1)
+    emitted = jnp.where(j < res.n_accept[:, None], shifted, PAD_TOKEN)
+    emitted = jnp.where(j == res.n_accept[:, None],
+                        res.bonus_token[:, None], emitted)
+
+    new_state = DecodeState(
+        cache=new_cache, cache_len=state.cache_len + res.n_accept + 1,
+        last_token=res.bonus_token, last_hidden=h_next,
+        prefix_k=pk, prefix_v=pv, rng=rng)
+    return StepResult(new_state, emitted, res.n_accept + 1)
+
+
+def init_eagle_decode_state(params, dp, cfg: ModelConfig, prompt,
+                            max_len: int, rng, *, greedy: bool = True):
+    """Prefill + EAGLE-cache initialization. Differs from the Hydra++ path:
+    committed eagle-cache entries are keyed by fc([E(x_p); h_{p-1}]), not by
+    raw base hiddens."""
+    from repro.core.speculative import DecodeState
+    from repro.core.heads import init_prefix_cache
+    from repro.models.model import forward, init_cache
+
+    B, P = prompt.shape
+    pos = jnp.broadcast_to(jnp.arange(P), (B, P))
+    cache = init_cache(cfg, B, max_len)
+    out = forward(params, cfg, prompt, pos, mode="full", cache=cache,
+                  want_logits=False)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"])
+    last_logits = (out.hidden[:, -1].astype(jnp.float32)
+                   @ unembed.astype(jnp.float32))
+    rng, sub = jax.random.split(rng)
+    if greedy:
+        tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    else:
+        tok0 = jax.random.categorical(sub, last_logits).astype(jnp.int32)
+
+    E = params["embed"][prompt]                            # (B,P,d)
+    h_prev = jnp.concatenate([jnp.zeros_like(out.hidden[:, :1]),
+                              out.hidden[:, :-1]], axis=1)
+    z = jnp.concatenate([E, h_prev.astype(E.dtype)], axis=-1) @ dp["fc"]
+    _, nk, nv = _eagle_layer(dp, cfg, z, pos, None, None, None)
+    pc = init_prefix_cache(cfg, B, max_len)
+    pk = pc["k"].at[:, :P].set(nk.astype(pc["k"].dtype))
+    pv = pc["v"].at[:, :P].set(nv.astype(pc["v"].dtype))
+    return DecodeState(cache=out.cache,
+                       cache_len=jnp.full((B,), P, jnp.int32),
+                       last_token=tok0, last_hidden=out.hidden[:, -1],
+                       prefix_k=pk, prefix_v=pv, rng=rng)

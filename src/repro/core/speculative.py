@@ -1,0 +1,235 @@
+"""The speculative decoding step — the paper's end-to-end mechanism.
+
+One ``spec_decode_step`` = draft (tree or chain, via Medusa/Hydra heads) ->
+verify (ONE base-model forward over the T tree tokens) -> accept (greedy or
+typical criterion) -> commit caches -> emit tokens.
+
+All shapes are static: the candidate tree is a compile-time topology, the
+cache is max-length with per-row ``cache_len``, acceptance compaction is
+gather-based. The whole step jits once and never retraces.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.heads import (draft_tree_tokens, init_prefix_cache,
+                              prefix_forward)
+from repro.core.verify import greedy_verify, typical_verify
+from repro.models.model import forward, init_cache
+from repro.serving.cache import commit_cache, commit_prefix_cache
+
+PAD_TOKEN = -1
+
+
+class DecodeState(NamedTuple):
+    cache: Any                      # committed model cache
+    cache_len: jnp.ndarray          # (B,)
+    last_token: jnp.ndarray         # (B,) last generated, not yet forwarded
+    last_hidden: jnp.ndarray        # (B, d) head-input hidden state
+    prefix_k: Optional[jnp.ndarray]  # PrefixAttention cache (hydra++)
+    prefix_v: Optional[jnp.ndarray]
+    rng: jnp.ndarray
+
+
+class StepResult(NamedTuple):
+    state: DecodeState
+    emitted: jnp.ndarray            # (B, D+1) tokens, PAD-filled
+    n_emitted: jnp.ndarray          # (B,) = n_accept + 1 (incl. bonus)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(params, draft_params, cfg: ModelConfig, prompt,
+                      max_len: int, rng, *, greedy: bool = True):
+    """prompt: (B, P) equal-length (engine pads). Runs prefill, samples the
+    first token, initializes all caches."""
+    B, P = prompt.shape
+    pos = jnp.broadcast_to(jnp.arange(P), (B, P))
+    cache = init_cache(cfg, B, max_len)
+    # want_logits=False: never materialize (B, P, V) at prefill — only the
+    # last position's logits are needed to sample the first token.
+    out = forward(params, cfg, prompt, pos, mode="full", cache=cache,
+                  want_logits=False)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"])
+    last_logits = (out.hidden[:, -1].astype(jnp.float32)
+                   @ unembed.astype(jnp.float32))
+    rng, sub = jax.random.split(rng)
+    if greedy:
+        tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    else:
+        tok0 = jax.random.categorical(sub, last_logits).astype(jnp.int32)
+
+    h = out.hidden[:, -1]
+    pk = pv = None
+    if draft_params is not None and "prefix" in draft_params:
+        ph, nk, nv = prefix_forward(draft_params, cfg, out.hidden, pos)
+        pc = init_prefix_cache(cfg, B, max_len)
+        pk = pc["k"].at[:, :P].set(nk.astype(pc["k"].dtype))
+        pv = pc["v"].at[:, :P].set(nv.astype(pc["v"].dtype))
+        h = ph[:, -1]
+    return DecodeState(cache=out.cache,
+                       cache_len=jnp.full((B,), P, jnp.int32),
+                       last_token=tok0, last_hidden=h,
+                       prefix_k=pk, prefix_v=pv, rng=rng)
+
+
+# ---------------------------------------------------------------------------
+# the speculative step
+# ---------------------------------------------------------------------------
+
+
+def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
+                     state: DecodeState, *, criterion: str = "greedy",
+                     temperature: float = 0.7, epsilon: float = 0.15,
+                     alpha: Optional[float] = None) -> StepResult:
+    B = state.last_token.shape[0]
+    T = tree.size
+    depth = jnp.asarray(tree.depth)
+    tm = jnp.asarray(tree.ancestor_mask)
+
+    # 1. draft: populate the candidate tree (root = last_token)
+    tokens, draft_logp = draft_tree_tokens(
+        draft_params, cfg, params, tree, state.last_hidden, state.last_token)
+
+    # 2. verify: one base forward over the T tree tokens
+    positions = state.cache_len[:, None] + depth[None, :]
+    out = forward(params, cfg, tokens, positions, mode="verify",
+                  cache=state.cache, cache_len=state.cache_len, tree_mask=tm)
+
+    # 3. accept
+    rng, sub = jax.random.split(state.rng)
+    if criterion == "greedy":
+        res = greedy_verify(tree, tokens, out.logits)
+    elif criterion == "typical":
+        res = typical_verify(tree, tokens, out.logits, sub,
+                             temperature=temperature, epsilon=epsilon,
+                             alpha=alpha)
+    else:
+        raise ValueError(criterion)
+
+    # 4. commit
+    new_cache = commit_cache(out.cache, state.cache_len, res.path_nodes,
+                             res.n_accept)
+    D1 = res.path_nodes.shape[1]
+    bidx = jnp.arange(B)[:, None]
+    acc_hidden = out.hidden[bidx, res.path_nodes]          # (B, D1, d)
+
+    if draft_params is not None and "prefix" in draft_params:
+        ppos = state.cache_len[:, None] + jnp.arange(D1)[None, :]
+        ph, nk, nv = prefix_forward(
+            draft_params, cfg, acc_hidden, ppos,
+            cache_k=state.prefix_k, cache_v=state.prefix_v,
+            cache_len=state.cache_len, tree_mask=None)     # chain mask
+        pk, pv = commit_prefix_cache(nk, nv, state.cache_len, res.path_nodes)
+        h_next = jnp.take_along_axis(
+            ph, res.n_accept[:, None, None], axis=1)[:, 0]
+    else:
+        pk, pv = state.prefix_k, state.prefix_v
+        h_next = jnp.take_along_axis(
+            acc_hidden, res.n_accept[:, None, None], axis=1)[:, 0]
+
+    # 5. emitted tokens this step: accepted candidates then the bonus token
+    tok_path = tokens[bidx, res.path_nodes]                # (B, D1)
+    j = jnp.arange(D1)[None, :]
+    shifted = jnp.concatenate([tok_path[:, 1:],
+                               jnp.full((B, 1), PAD_TOKEN, jnp.int32)], 1)
+    emitted = jnp.where(j < res.n_accept[:, None], shifted, PAD_TOKEN)
+    emitted = jnp.where(j == res.n_accept[:, None], res.bonus_token[:, None],
+                        emitted)
+
+    new_state = DecodeState(
+        cache=new_cache,
+        cache_len=state.cache_len + res.n_accept + 1,
+        last_token=res.bonus_token,
+        last_hidden=h_next,
+        prefix_k=pk, prefix_v=pv, rng=rng)
+    return StepResult(new_state, emitted, res.n_accept + 1)
+
+
+# ---------------------------------------------------------------------------
+# autoregressive baseline step (T=1 "tree")
+# ---------------------------------------------------------------------------
+
+
+def autoregressive_step(params, cfg: ModelConfig, state: DecodeState, *,
+                        greedy: bool = True,
+                        temperature: float = 1.0) -> StepResult:
+    B = state.last_token.shape[0]
+    tokens = state.last_token[:, None]
+    positions = state.cache_len[:, None]
+    out = forward(params, cfg, tokens, positions, mode="verify",
+                  cache=state.cache, cache_len=state.cache_len,
+                  tree_mask=None)
+    rng, sub = jax.random.split(state.rng)
+    logits = out.logits[:, 0]
+    if greedy:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        nxt = jax.random.categorical(sub, logits / temperature
+                                     ).astype(jnp.int32)
+    path = jnp.zeros((B, 1), jnp.int32)
+    zero = jnp.zeros((B,), jnp.int32)
+    new_cache = commit_cache(out.cache, state.cache_len, path, zero)
+    new_state = DecodeState(
+        cache=new_cache, cache_len=state.cache_len + 1, last_token=nxt,
+        last_hidden=out.hidden[:, 0], prefix_k=state.prefix_k,
+        prefix_v=state.prefix_v, rng=rng)
+    return StepResult(new_state, nxt[:, None], jnp.ones((B,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# generation loop (python-level; the step itself is jitted once)
+# ---------------------------------------------------------------------------
+
+
+def generate(params, draft_params, cfg: ModelConfig, tree, prompt, *,
+             max_new_tokens: int = 64, max_len: int = 1024, rng=None,
+             criterion: str = "greedy", use_speculative: bool = True,
+             temperature: float = 0.7, epsilon: float = 0.15):
+    """Returns (tokens (B, max_new_tokens), steps_taken, accept_lengths)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    state = init_decode_state(params, draft_params, cfg, prompt, max_len,
+                              rng, greedy=(criterion == "greedy"))
+    B = prompt.shape[0]
+
+    if use_speculative:
+        # cfg/tree are static topology — capture them in the jitted closure
+        step_fn = jax.jit(lambda p, dp, st: spec_decode_step(
+            p, dp, cfg, tree, st, criterion=criterion,
+            temperature=temperature, epsilon=epsilon))
+
+        def run_step(st):
+            return step_fn(params, draft_params, st)
+    else:
+        ar_fn = jax.jit(lambda p, st: autoregressive_step(
+            p, cfg, st, greedy=(criterion == "greedy"),
+            temperature=temperature))
+
+        def run_step(st):
+            return ar_fn(params, st)
+
+    outs = [state.last_token[:, None]]  # first token from prefill
+    produced = 1
+    steps = 0
+    accept_lens = []
+    while produced < max_new_tokens:
+        state, emitted, n_em = run_step(state)
+        outs.append(emitted)
+        accept_lens.append(n_em)
+        produced += int(n_em.min())
+        steps += 1
+        if steps > 4 * max_new_tokens:
+            break
+    toks = jnp.concatenate(outs, axis=1)
+    acc = (jnp.stack(accept_lens, 1).astype(jnp.float32)
+           if accept_lens else jnp.ones((B, 1)))
+    return toks, steps, acc

@@ -1,0 +1,122 @@
+"""Verification criteria for (tree) speculative decoding.
+
+Greedy acceptance (Stern et al.) and typical acceptance (Cai et al., used in
+paper §6.3). Both operate on the base model's logits computed over the
+candidate tree in a single forward pass; both are fully vectorized over the
+batch and jit-friendly (the tree is static).
+
+Returned convention: ``path_nodes`` (B, D+1) node ids of the accepted path
+(root first, padded by repeating the last accepted node); ``n_accept`` (B,)
+number of accepted CANDIDATES (excluding the root; the appended tokens per
+step are root + n_accept candidates, and the model emits one extra "bonus"
+token from the last accepted node's distribution).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class VerifyResult(NamedTuple):
+    path_nodes: jnp.ndarray     # (B, D+1) int32, path_nodes[:,0] == 0
+    n_accept: jnp.ndarray       # (B,) int32, # accepted candidates
+    bonus_token: jnp.ndarray    # (B,) int32 token emitted at path end
+    accept_mask: jnp.ndarray    # (B, T) bool per-node acceptance
+
+
+def _accept_to_path(tree, accepted):
+    """accepted: (B, T) bool (root always True). Deepest accepted node wins,
+    leftmost (lowest node id) tie-break."""
+    B, T = accepted.shape
+    dep = jnp.asarray(tree.depth)                         # (T,)
+    score = jnp.where(accepted, dep[None, :] * T - jnp.arange(T)[None, :],
+                      -1)
+    best = jnp.argmax(score, axis=1)                      # (B,)
+    anc = jnp.asarray(tree.ancestors)                     # (T, D+1)
+    n_accept = dep[best]
+    path = anc[best]                                      # (B, D+1)
+    # pad entries beyond depth with the best (deepest) node itself
+    D1 = path.shape[1]
+    pad = jnp.arange(D1)[None, :] > n_accept[:, None]
+    path = jnp.where(pad, best[:, None], path)
+    return path, n_accept, best
+
+
+def greedy_verify(tree, tree_tokens, base_logits) -> VerifyResult:
+    """Accept a candidate iff it equals the base model's argmax at its
+    parent (and its parent is accepted)."""
+    B, T, V = base_logits.shape
+    argmax = jnp.argmax(base_logits, axis=-1)             # (B, T)
+    parents = np.asarray(tree.parents)
+    ok = jnp.ones((B, T), bool)
+    for i in range(1, T):  # static loop, topological
+        p = parents[i]
+        ok = ok.at[:, i].set(ok[:, p] &
+                             (tree_tokens[:, i] == argmax[:, p]))
+    path, n_accept, best = _accept_to_path(tree, ok)
+    bonus = jnp.take_along_axis(argmax, best[:, None], axis=1)[:, 0]
+    return VerifyResult(path, n_accept, bonus, ok)
+
+
+def typical_verify(tree, tree_tokens, base_logits, rng, *,
+                   temperature: float = 0.7, epsilon: float = 0.15,
+                   alpha: Optional[float] = None) -> VerifyResult:
+    """Typical acceptance (paper §6.3 / Cai et al. 2024): accept x̂ iff
+
+        p_base(x̂ | parent path; τ) > min(ε, α · exp(-H(p_base(·|...;τ))))
+
+    with α = sqrt(ε) by default. The bonus token is sampled from the last
+    accepted node's (temperature) distribution."""
+    if alpha is None:
+        alpha = float(np.sqrt(epsilon))
+    B, T, V = base_logits.shape
+    logits_t = base_logits / temperature
+    logp = jax.nn.log_softmax(logits_t, axis=-1)          # (B, T, V)
+    H = -jnp.sum(jnp.exp(logp) * logp, axis=-1)           # (B, T) entropy
+    thresh = jnp.minimum(epsilon, alpha * jnp.exp(-H))    # (B, T)
+
+    parents = np.asarray(tree.parents)
+    ok = jnp.ones((B, T), bool)
+    for i in range(1, T):
+        p = parents[i]
+        p_tok = jnp.take_along_axis(jnp.exp(logp[:, p]),
+                                    tree_tokens[:, i][:, None], axis=1)[:, 0]
+        ok = ok.at[:, i].set(ok[:, p] & (p_tok > thresh[:, p]))
+    path, n_accept, best = _accept_to_path(tree, ok)
+    best_logits = jnp.take_along_axis(
+        logits_t, best[:, None, None], axis=1)[:, 0]      # (B, V)
+    bonus = jax.random.categorical(rng, best_logits, axis=-1)
+    return VerifyResult(path, n_accept, bonus.astype(jnp.int32), ok)
+
+
+def chain_rejection_verify(tree_tokens, draft_logp, base_logits, rng,
+                           *, temperature: float = 1.0) -> VerifyResult:
+    """Distribution-preserving rejection resampling (Leviathan et al.) for
+    CHAIN speculation: tokens (B, K+1) with [:,0] the root. draft_logp:
+    (B, K+1) draft log-prob of each candidate. Kept for completeness and the
+    SSM chain path; the paper's experiments use greedy/typical."""
+    B, T = tree_tokens.shape
+    K = T - 1
+    logp = jax.nn.log_softmax(base_logits / temperature, axis=-1)
+    u = jax.random.uniform(rng, (B, K))
+    ok = jnp.ones((B,), bool)
+    n_accept = jnp.zeros((B,), jnp.int32)
+    for i in range(1, T):
+        p_base = jnp.exp(jnp.take_along_axis(
+            logp[:, i - 1], tree_tokens[:, i][:, None], axis=1))[:, 0]
+        p_draft = jnp.exp(draft_logp[:, i])
+        acc = u[:, i - 1] < jnp.minimum(1.0, p_base / jnp.maximum(p_draft,
+                                                                  1e-20))
+        ok = ok & acc
+        n_accept = n_accept + ok.astype(jnp.int32)
+    best = n_accept
+    path = jnp.minimum(jnp.arange(T)[None, :], n_accept[:, None])
+    bonus_logits = jnp.take_along_axis(
+        logp, n_accept[:, None, None], axis=1)[:, 0]
+    bonus = jax.random.categorical(jax.random.fold_in(rng, 1), bonus_logits)
+    ok_mask = jnp.arange(T)[None, :] <= n_accept[:, None]
+    return VerifyResult(path.astype(jnp.int32), n_accept,
+                        bonus.astype(jnp.int32), ok_mask)

@@ -1,0 +1,209 @@
+"""Sharding rules: map every param / input / cache leaf to a PartitionSpec.
+
+Scheme (Megatron-style tensor parallelism under GSPMD):
+  * batch dims            -> ('pod','data') on the multi-pod mesh, 'data'
+                             on single-pod; dropped when not divisible
+                             (e.g. long_500k batch=1 — the SEQUENCE dim of
+                             the KV cache shards over the data axes instead)
+  * attention qkv/o, MLP up/down, vocab/unembed, MoE experts, RWKV
+    projections -> 'model' on the dim listed in _RULES, kept only when the
+    dim is divisible by the model-axis size (d_ff and H*head_dim divide 16
+    for every assigned arch; raw head counts often don't — see DESIGN.md)
+  * Mamba2 in/out projections stay replicated (mixed z|x|B|C|dt output
+    layout does not split cleanly; zamba2's mamba layers are small) —
+    a documented TPU adaptation.
+  * norms / scalars / routers / draft-head MLPs (small) replicate.
+
+Stacked-layer params (under 'groups') carry a leading layer axis: rules are
+written for the logical (unstacked) shape and left-padded with None.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# rule: param name -> tuple of logical-dim axis names (None = replicate),
+# aligned to the TRAILING dims of the leaf.
+_RULES = {
+    # embeddings / unembeddings
+    "embed": ("model", None),         # (V, d): vocab-parallel
+    "lm_head": (None, "model"),       # (d, V)
+    "unembed": (None, "model"),
+    "mask_embed": (None,),
+    # attention (GQA)
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # MLA
+    "w_dq": (None, "model"), "w_dkv": (None, "model"),
+    "w_krope": (None, None),
+    "w_uk": (None, "model"), "w_uv": (None, "model"),
+    # MLP (2D) and MoE experts (3D, leading expert dim)
+    "w_gate": (None, "model"), "w_up": (None, "model"),
+    "w_down": ("model", None),
+    "router": (None, None),
+    # rwkv6
+    "wr": (None, "model"), "wg": (None, "model"),
+    "gn_gamma": ("model",), "gn_beta": ("model",),
+    "u_bonus": ("model", None),
+    "cm_wk": (None, "model"), "cm_wv": ("model", None),
+    "cm_wr": (None, "model"),
+}
+
+# MoE expert stacks: shard the expert axis instead (expert parallelism)
+_MOE_3D = {"w_gate": ("model", None, None), "w_up": ("model", None, None),
+           "w_down": ("model", None, None)}
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_axis_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh_axis_size(mesh, a) for a in batch_axes(mesh)]))
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = (int(np.prod([mesh_axis_size(mesh, a) for a in axis]))
+            if isinstance(axis, tuple) else mesh_axis_size(mesh, axis))
+    return dim % size == 0
+
+
+_ATTN_QKVO = {"wq", "wk", "wv", "wo", "bq", "bk", "bv"}
+
+
+def spec_for_param(path, leaf, mesh: Mesh, *, head_dim: int = 0,
+                   replicate_ragged_attn: bool = False) -> P:
+    name = None
+    keys = []
+    for part in path:
+        key = getattr(part, "key", getattr(part, "name", None))
+        if isinstance(key, str):
+            keys.append(key)
+    name = keys[-1] if keys else None
+    if name is None or name not in _RULES:
+        return P()
+    rule = _RULES[name]
+    if name in _MOE_3D and "moe" in keys and "shared" not in keys:
+        rule = _MOE_3D[name]         # routed expert stack: (E, din, dout)
+    # Ragged-head guard (§Perf): sharding the fused (H*hd) projection dim
+    # when H doesn't divide the model axis makes GSPMD split HEAD_DIM,
+    # turning every attention-score contraction into a cross-device
+    # partial-sum all-reduce (measured: 93% of qwen prefill collective
+    # bytes). For inference steps we replicate those projections instead —
+    # attention becomes collective-free data-parallel; the FFN/vocab keep
+    # tensor parallelism.
+    if head_dim and "attn" in keys and name in _ATTN_QKVO:
+        mp = mesh_axis_size(mesh, "model")
+        fused = leaf.shape[-2] if name == "wo" else leaf.shape[-1]
+        n_heads = max(fused // head_dim, 1)
+        if n_heads % mp != 0:
+            if name in ("wk", "wv", "bk", "bv"):
+                # ragged KV heads: replicate (small weights; keeps scores
+                # local — the alternative mid-head split all-reduces every
+                # attention block)
+                return P()
+            if replicate_ragged_attn:
+                return P()
+    nd = leaf.ndim
+    if len(rule) > nd:
+        return P()
+    # left-pad for stack axes, then drop axes that don't divide
+    full = (None,) * (nd - len(rule)) + tuple(rule)
+    full = tuple(ax if _fits(leaf.shape[i], mesh, ax) else None
+                 for i, ax in enumerate(full))
+    return P(*full)
+
+
+def params_shardings(params_shapes, mesh: Mesh, *, head_dim: int = 0,
+                     replicate_ragged_attn: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec_for_param(
+            p, l, mesh, head_dim=head_dim,
+            replicate_ragged_attn=replicate_ragged_attn)),
+        params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# activations / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_spec_axis(mesh: Mesh, batch: int):
+    """Largest batch sharding that divides: ('pod','data'), ('data',), or
+    None."""
+    ba = batch_axes(mesh)
+    if ba and batch % int(np.prod([mesh_axis_size(mesh, a) for a in ba])) == 0:
+        return ba
+    if "data" in mesh.shape and batch % mesh_axis_size(mesh, "data") == 0:
+        return ("data",)
+    return None
+
+
+def tokens_sharding(mesh: Mesh, batch: int) -> NamedSharding:
+    return NamedSharding(mesh, P(batch_spec_axis(mesh, batch), None))
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch: int):
+    """Cache pytree -> shardings. Layout conventions (models/model.py):
+    attn 'k'/'v': (L, B, S, H, hd) or MLA (L, B, S, r);
+    'ssd_state': (L, B, H, dk, dv); 'wkv_state': same;
+    'conv_win': (L, B, W-1, C); 'shift_*': (L, B, 1, d).
+
+    batch sharded when divisible; otherwise the cache SEQ dim shards over
+    the data axes (long-context decode, batch=1)."""
+    b_ax = batch_spec_axis(mesh, batch)
+    seq_ax = None if b_ax is not None else batch_axes(mesh) or None
+    mp = mesh_axis_size(mesh, "model")
+
+    def spec(path, leaf):
+        name = None
+        for part in reversed(path):
+            key = getattr(part, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        nd = leaf.ndim
+        if name in ("k", "v"):
+            off = 1  # model caches always carry a leading layer axis
+            axes = [None] * nd
+            axes[off] = b_ax
+            axes[off + 1] = seq_ax
+            if nd - off == 4 and leaf.shape[off + 2] % mp == 0:
+                axes[off + 2] = "model"          # head axis
+            elif nd - off == 3 and leaf.shape[off + 2] % mp == 0:
+                axes[off + 2] = "model"          # MLA latent rank
+            elif (seq_ax is None and nd - off == 4
+                  and leaf.shape[off + 1] % mp == 0):
+                # ragged KV heads: flash-decoding-style SEQUENCE sharding of
+                # the cache over the model axis (partial-softmax combine
+                # collectives are tiny vs reading a replicated cache; §Perf)
+                axes[off + 1] = "model"
+            return P(*axes)
+        if name in ("ssd_state", "wkv_state"):
+            axes = [None] * nd
+            axes[1] = b_ax
+            if name == "wkv_state" and leaf.shape[2] % mp == 0:
+                axes[2] = "model"                # rwkv heads are sharded
+            return P(*axes)
+        if name in ("conv_win", "shift_tm", "shift_cm"):
+            axes = [None] * nd
+            axes[1] = b_ax
+            return P(*axes)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec(p, l)), cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper: model layout (B,S,H,D) <-> kernel layout (B,H,S,D)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,
+                         interpret: bool = True):
+    """q: (B,S,Hq,D); k/v: (B,S,Hkv,D) — model-native layout."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention(qt, kt, vt, causal=causal, window=window,
+                        interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

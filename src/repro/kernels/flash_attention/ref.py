@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash_attention (naive quadratic softmax attention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,Hq,S,D); k/v: (B,Hkv,S,D)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / (D ** 0.5)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper: model layout (B,S,H,d) + padding to chunk multiples."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.linear_attn_chunk.kernel import linear_attn_chunk
+
+
+def linear_attn_bshd(r, k, v, w_log, u=None, *, chunk: int = 64,
+                     interpret: bool = True):
+    """r/k/w_log: (B,S,H,dk); v: (B,S,H,dv)."""
+    B, S, H, dk = k.shape
+    Sp = -(-S // chunk) * chunk
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    if Sp != S:
+        padS = lambda t: jnp.pad(t, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        r, k, v, w_log = padS(r), padS(k), padS(v), padS(w_log)
+    o = linear_attn_chunk(tr(r), tr(k), tr(v), tr(w_log), u, chunk=chunk,
+                          use_u=u is not None, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)[:, :S]

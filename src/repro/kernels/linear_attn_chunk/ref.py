@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: naive sequential decay linear attention recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_attn_ref(r, k, v, w_log, u=None):
+    """r/k/w_log: (B,H,S,dk); v: (B,H,S,dv); u: (H,dk) or None."""
+    B, H, S, dk = k.shape
+    dv = v.shape[-1]
+    S0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+    rf, kf, vf, wf = (jnp.moveaxis(t.astype(jnp.float32), 2, 0)
+                      for t in (r, k, v, w_log))
+
+    def body(state, xs):
+        rt, kt, vt, wt = xs
+        o = jnp.einsum("bhd,bhdv->bhv", rt, state)
+        if u is not None:
+            o = o + jnp.einsum("bhd,bhd->bh",
+                               rt * u.astype(jnp.float32)[None], kt
+                               )[..., None] * vt
+        state = state * jnp.exp(wt)[..., None] + kt[..., None] * vt[:, :, None]
+        return state, o
+
+    _, o = jax.lax.scan(body, S0, (rf, kf, vf, wf))
+    return jnp.moveaxis(o, 0, 2).astype(v.dtype)

@@ -1,0 +1,119 @@
+"""Pallas TPU tree-verification attention — the Medusa/Hydra hot-spot.
+
+One speculative step verifies T candidate-tree tokens against a KV cache of
+length `cache_len` plus the tree tokens themselves under an ancestor mask.
+
+TPU-native design (vs the GPU approach of materializing a (T, S) additive
+mask): the cache sweep is mask-free except for a per-block validity clamp
+(k_pos < cache_len, via scalar prefetch), streamed HBM->VMEM in bk-sized
+blocks with online softmax; the static (T, T) ancestor mask only touches the
+final grid step. MXU alignment: bk multiple of 128; T is padded by ops.py.
+
+Grid: (B, Hq, n_cache_blocks + 1), innermost 'arbitrary' (sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _tree_body(lens_ref, q_ref, ck_ref, cv_ref, tk_ref, tv_ref, tm_ref,
+               o_ref, m_sc, l_sc, acc_sc, *, bk: int, scale: float,
+               n_kb: int, T: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    cache_len = lens_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (T, D)
+
+    @pl.when(jnp.logical_and(ki < n_kb, ki * bk < cache_len))
+    def _cache_step():
+        k = ck_ref[0, 0].astype(jnp.float32)                 # (bk, D)
+        v = cv_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (T, bk)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (T, bk), 1)
+        mask = k_pos < cache_len
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_sc[...] = m_new
+
+    @pl.when(ki == n_kb)
+    def _tree_step():
+        k = tk_ref[0, 0].astype(jnp.float32)                 # (T, D)
+        v = tv_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (T, T)
+        mask = tm_ref[...]                                   # ancestor-or-self
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
+        acc = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def tree_attention(q, cache_k, cache_v, tree_k, tree_v, tree_mask, cache_len,
+                   *, bk: int = 512, interpret: bool = True):
+    """q: (B,Hq,T,D); cache_k/v: (B,Hkv,S,D); tree_k/v: (B,Hkv,T,D);
+    tree_mask: (T,T) bool ancestor-or-self; cache_len: (B,) int32.
+    Returns (B,Hq,T,D)."""
+    B, Hq, T, D = q.shape
+    Hkv, S = cache_k.shape[1], cache_k.shape[2]
+    G = Hq // Hkv
+    bk = min(bk, S)
+    assert S % bk == 0
+    n_kb = S // bk
+    scale = 1.0 / (D ** 0.5)
+
+    body = functools.partial(_tree_body, bk=bk, scale=scale, n_kb=n_kb, T=T)
+    grid = (B, Hq, n_kb + 1)
+    clamp = lambda j: jnp.minimum(j, n_kb - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, T, D), lambda b, h, j, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, j, lens: (b, h // G, clamp(j), 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, j, lens: (b, h // G, clamp(j), 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, j, lens: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, j, lens: (b, h // G, 0, 0)),
+            pl.BlockSpec((T, T), lambda b, h, j, lens: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, D), lambda b, h, j, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len, q, cache_k, cache_v, tree_k, tree_v, tree_mask)

@@ -1,0 +1,26 @@
+"""Jit'd wrapper: model layout + T padding to MXU-friendly multiples."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.tree_attention.kernel import tree_attention
+
+
+def tree_attention_bshd(q, cache_k, cache_v, tree_k, tree_v, tree_mask,
+                        cache_len, *, pad_to: int = 8, interpret: bool = True):
+    """q: (B,T,Hq,D); cache/tree k,v: (B,S|T,Hkv,D); tree_mask (T,T)."""
+    B, T, Hq, D = q.shape
+    Tp = -(-T // pad_to) * pad_to
+    if Tp != T:
+        padT = lambda t: jnp.pad(t, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        q, tree_k, tree_v = padT(q), padT(tree_k), padT(tree_v)
+        tm = jnp.zeros((Tp, Tp), bool).at[:T, :T].set(tree_mask)
+        tm = tm.at[jnp.arange(T, Tp), jnp.arange(T, Tp)].set(True)
+        tree_mask = tm
+    o = tree_attention(q.transpose(0, 2, 1, 3),
+                       cache_k.transpose(0, 2, 1, 3),
+                       cache_v.transpose(0, 2, 1, 3),
+                       tree_k.transpose(0, 2, 1, 3),
+                       tree_v.transpose(0, 2, 1, 3),
+                       tree_mask, cache_len, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)[:, :T]

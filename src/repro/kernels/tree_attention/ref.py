@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for tree_attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q, cache_k, cache_v, tree_k, tree_v, tree_mask,
+                       cache_len):
+    """Same contract as kernel.tree_attention."""
+    B, Hq, T, D = q.shape
+    Hkv, S = cache_k.shape[1], cache_k.shape[2]
+    G = Hq // Hkv
+    kx = jnp.repeat(jnp.concatenate([cache_k, tree_k], axis=2), G, axis=1)
+    vx = jnp.repeat(jnp.concatenate([cache_v, tree_v], axis=2), G, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / (D ** 0.5)
+    kv_pos = jnp.arange(S + T)
+    in_cache = kv_pos[None, :] < cache_len[:, None]                 # (B, S+T)
+    in_cache = in_cache & (kv_pos[None, :] < S)
+    tm_full = jnp.zeros((T, S + T), bool).at[:, S:].set(tree_mask)
+    mask = in_cache[:, None, None, :] | tm_full[None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhts,bhsd->bhtd", p, vx.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,183 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production meshes, print memory/cost analysis, extract roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results are appended to results/dryrun/<arch>__<shape>__<mesh>.json so the
+sweep is resumable; benchmarks/roofline.py renders the table.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before ANY jax-importing module: jax locks the device count on
+# first init. Set ONLY here — tests/benches see 1 device.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config, list_configs
+from repro.launch.hlo_analysis import (analytic_min_bytes, model_flops,
+                                       roofline_terms)
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_lower_spec, skip_reason
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str = RESULTS_DIR, verbose: bool = True,
+            cfg=None) -> dict:
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "?"}
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        _save(rec, out_dir)
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        spec = build_lower_spec(cfg, shape_name, mesh)
+        with mesh:
+            jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                             donate_argnums=spec.donate_argnums)
+            lowered = jitted.lower(*spec.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware per-device costs (xla cost_analysis counts while
+        # bodies once — useless for scan-over-layers models)
+        parsed = analyze_hlo(hlo)
+        coll = dict(parsed["collectives"], total=parsed["collective_bytes"])
+
+        flops_dev = float(parsed["flops"])
+        bytes_dev = float(parsed["hbm_bytes"])
+        terms = roofline_terms(flops_dev, bytes_dev, coll["total"])
+        mf = model_flops(cfg, shape)
+        mp = mesh.shape.get("model", 1)
+        min_bytes = analytic_min_bytes(cfg, shape, int(n_chips), mp)
+        terms_min = roofline_terms(flops_dev, min_bytes, coll["total"])
+
+        rec.update(
+            status="ok", note=spec.note, n_chips=int(n_chips),
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            # memory_analysis (per device)
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            peak_bytes=(getattr(mem, "argument_size_in_bytes", 0)
+                        + getattr(mem, "output_size_in_bytes", 0)
+                        + getattr(mem, "temp_size_in_bytes", 0)
+                        - getattr(mem, "alias_size_in_bytes", 0)),
+            # cost_analysis (per device, post-SPMD)
+            hlo_flops_per_dev=flops_dev,
+            hlo_bytes_per_dev=bytes_dev,
+            xla_cost_flops_per_dev=float(cost.get("flops", 0.0)),
+            xla_cost_bytes_per_dev=float(cost.get("bytes accessed", 0.0)),
+            collective_bytes_per_dev=coll["total"],
+            collectives=coll,
+            model_flops_global=mf,
+            useful_flops_ratio=(mf / (flops_dev * n_chips)
+                                if flops_dev else None),
+            analytic_min_bytes_per_dev=min_bytes,
+            memory_s_pallas_ideal=terms_min["memory_s"],
+            bottleneck_pallas_ideal=terms_min["bottleneck"],
+            **terms,
+        )
+        if verbose:
+            print(f"[dryrun] OK {arch} x {shape_name} [{mesh_name}] "
+                  f"({spec.note}) lower {t_lower:.0f}s compile "
+                  f"{t_compile:.0f}s")
+            print(f"  memory/device: args={_gb(rec['argument_bytes'])} "
+                  f"out={_gb(rec['output_bytes'])} "
+                  f"temp={_gb(rec['temp_bytes'])}")
+            print(f"  flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+                  f"coll/dev={coll['total']:.3e} "
+                  f"(ag={coll['all-gather']:.2e} ar={coll['all-reduce']:.2e}"
+                  f" rs={coll['reduce-scatter']:.2e} "
+                  f"a2a={coll['all-to-all']:.2e} "
+                  f"cp={coll['collective-permute']:.2e})")
+            print(f"  roofline: compute={terms['compute_s']:.3e}s "
+                  f"memory={terms['memory_s']:.3e}s "
+                  f"collective={terms['collective_s']:.3e}s -> "
+                  f"bottleneck={terms['bottleneck']} | "
+                  f"useful-flops-ratio="
+                  f"{rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] ERROR {arch} x {shape_name} [{mesh_name}]: "
+                  f"{type(e).__name__}: {e}")
+    _save(rec, out_dir)
+    return rec
+
+
+def _gb(x):
+    return f"{x/2**30:.2f}GiB" if x is not None else "?"
+
+
+def _save(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip pairs with an existing ok/skip record")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else [a for a in list_configs()
+                                           if a != "vicuna-tiny"]
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    if not (args.all or args.arch):
+        ap.error("pass --arch or --all")
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            if args.skip_done:
+                f = os.path.join(RESULTS_DIR,
+                                 f"{arch}__{shape}__{mesh_name}.json")
+                if os.path.exists(f):
+                    with open(f) as fh:
+                        if json.load(fh).get("status") in ("ok", "skip"):
+                            continue
+            rec = run_one(arch, shape, args.multi_pod)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skip"
+            n_err += rec["status"] == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

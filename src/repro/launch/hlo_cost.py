@@ -1,0 +1,361 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+massively undercounts scan-over-layers models (a 64-layer stack reports
+1/64 of its flops). This module parses the post-SPMD HLO text and computes:
+
+  * flops        — dot ops: 2 * prod(result dims) * prod(contracting dims),
+                   recursively scaled by each enclosing while's
+                   backend_config known_trip_count
+  * hbm_bytes    — sum of (operands + result) bytes of every *top-level*
+                   instruction in each computation (post-fusion HLO only
+                   materializes fusion boundaries, so this is a reasonable
+                   HBM-traffic proxy), trip-count scaled
+  * collectives  — result bytes per collective kind, trip-count scaled
+
+All values are PER DEVICE (the HLO is the per-device SPMD module).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# instruction: "%name = <type> opcode(...operands...), attrs"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+|[\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+# header: "[ENTRY] %name (args...) -> type {" — args may nest parens (tuples)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = _COMP_RE.match(s)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if s == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            # parameters: "%p = f32[..] parameter(0)" handled by regex; skip
+            continue
+        name = m.group(1).lstrip("%")
+        cur.instrs.append(Instr(name, m.group(2), m.group(3), s))
+        cur.shapes[name] = m.group(2)
+    return comps
+
+
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLED_SINGLE_RE = re.compile(
+    r"(?:body|to_apply|calls|condition|true_computation|"
+    r"false_computation)=%?([\w.\-]+)")
+_CALLED_LIST_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _called_computations(line: str) -> list:
+    out = [m.group(1) for m in _CALLED_SINGLE_RE.finditer(line)]
+    for m in _CALLED_LIST_RE.finditer(line):
+        out.extend(c.strip().lstrip("%") for c in m.group(1).split(","))
+    return out
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "iota", "partition-id", "replica-id", "after-all", "broadcast",
+    "reshape",
+    # CPU-backend loop-carried-buffer copies; aliased (free) on the TPU
+    # target, so excluded from the HBM-traffic model
+    "copy", "copy-start", "copy-done",
+}
+
+
+def _operand_names(instr: Instr) -> List[str]:
+    # take the first (...) group after the opcode
+    idx = instr.line.find(instr.opcode + "(")
+    rest = instr.line[idx + len(instr.opcode):]
+    depth = 0
+    out = []
+    buf = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                out.append(buf)
+                break
+        if depth >= 1:
+            buf += ch
+    if not out:
+        return []
+    names = []
+    for part in out[0].split(","):
+        part = part.strip()
+        if part.startswith("%"):
+            names.append(part[1:].split(" ")[0])
+        elif re.match(r"^[\w.\-]+$", part):
+            names.append(part)
+    return names
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    dims = _shape_dims(instr.type_str)
+    ops = _operand_names(instr)
+    if not ops:
+        return 0.0
+    lhs_type = shapes.get(ops[0], "")
+    lhs_dims = _shape_dims(lhs_type)
+    m = _CONTRACT_RE.search(instr.line)
+    contract = 1
+    if m and m.group(1):
+        for ci in m.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                contract *= lhs_dims[ci]
+    res = 1
+    for d in dims:
+        res *= d
+    return 2.0 * res * contract
+
+
+class HloCost:
+    def __init__(self, hlo: str):
+        self.comps = parse_computations(hlo)
+        self._memo: Dict[str, dict] = {}
+
+    def analyze(self) -> dict:
+        entry = self.comps.get("__entry__")
+        if entry is None:
+            return {"flops": 0.0, "hbm_bytes": 0.0,
+                    "collectives": {k: 0.0 for k in _COLLECTIVES},
+                    "collective_bytes": 0.0}
+        out = self._comp_cost(entry.name)
+        out["collective_bytes"] = sum(out["collectives"].values())
+        return out
+
+    def _instr_bytes(self, comp: Computation, ins: Instr) -> float:
+        """HBM traffic model per instruction.
+
+        Key subtlety: ops (or fusions) that dynamic-slice a loop-invariant
+        buffer read only the SLICE per iteration — charging the full buffer
+        x trip_count would overcount by the layer count. So:
+          dynamic-slice          -> 2 x result (read slice + write)
+          dynamic-update-slice   -> 2 x update operand
+          fusion                 -> result + per-operand charge, where an
+                                    operand that is only dynamic-sliced
+                                    inside the fusion body is charged at
+                                    the slice size
+          everything else        -> result + operands
+        """
+        op = ins.opcode
+        res = _type_bytes(ins.type_str)
+        ops = _operand_names(ins)
+        if op == "dynamic-slice":
+            return 2.0 * res
+        if op == "dynamic-update-slice":
+            upd = _type_bytes(comp.shapes.get(ops[1], "")) if len(ops) > 1 \
+                else res
+            return 2.0 * upd
+        if op == "fusion":
+            body = None
+            for c in _called_computations(ins.line):
+                if c in self.comps:
+                    body = self.comps[c]
+                    break
+            # in-place update fusions: write the UPDATE, not the full buffer
+            dus_update = self._fusion_dus_update_bytes(body)
+            b = min(res, dus_update) if dus_update else res
+            sliced = self._fusion_sliced_params(body) if body else set()
+            dus_aliased = self._fusion_dus_params(body) if body else set()
+            for i, o in enumerate(ops):
+                ob = _type_bytes(comp.shapes.get(o, ""))
+                if i in sliced:
+                    ob = min(ob, self._fusion_slice_bytes(body, i, ob))
+                elif i in dus_aliased:
+                    ob = 0.0  # aliased in place; write charged above
+                b += ob
+            return b
+        b = res
+        for o in ops:
+            b += _type_bytes(comp.shapes.get(o, ""))
+        return b
+
+    def _fusion_sliced_params(self, body: Computation) -> set:
+        """Indices of fusion params consumed ONLY via dynamic-slice."""
+        if body is None:
+            return set()
+        pidx = {}
+        for ins in body.instrs:
+            if ins.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", ins.line)
+                if m:
+                    pidx[ins.name] = int(m.group(1))
+        sliced, other = set(), set()
+        for ins in body.instrs:
+            names = _operand_names(ins)
+            for n in names:
+                if n in pidx:
+                    if ins.opcode == "dynamic-slice" and names and \
+                            names[0] == n:
+                        sliced.add(pidx[n])
+                    elif ins.opcode not in ("bitcast", "copy"):
+                        other.add(pidx[n])
+        return sliced - other
+
+    def _fusion_dus_update_bytes(self, body: Optional[Computation]) -> float:
+        """Total update-operand bytes of dynamic-update-slices in a fusion
+        body (0.0 if none)."""
+        if body is None:
+            return 0.0
+        total = 0.0
+        for ins in body.instrs:
+            if ins.opcode == "dynamic-update-slice":
+                ops = _operand_names(ins)
+                if len(ops) > 1:
+                    total += 2.0 * _type_bytes(body.shapes.get(ops[1], ""))
+        return total
+
+    def _fusion_dus_params(self, body: Optional[Computation]) -> set:
+        """Param indices that are operand-0 (the aliased buffer) of a DUS."""
+        if body is None:
+            return set()
+        pidx = {}
+        for ins in body.instrs:
+            if ins.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", ins.line)
+                if m:
+                    pidx[ins.name] = int(m.group(1))
+        out = set()
+        for ins in body.instrs:
+            if ins.opcode == "dynamic-update-slice":
+                ops = _operand_names(ins)
+                if ops and ops[0] in pidx:
+                    out.add(pidx[ops[0]])
+        return out
+
+    def _fusion_slice_bytes(self, body: Computation, param_idx: int,
+                            default: float) -> float:
+        pname = None
+        for ins in body.instrs:
+            if ins.opcode == "parameter" and \
+                    f"parameter({param_idx})" in ins.line:
+                pname = ins.name
+        if pname is None:
+            return default
+        for ins in body.instrs:
+            if ins.opcode == "dynamic-slice":
+                names = _operand_names(ins)
+                if names and names[0] == pname:
+                    return float(_type_bytes(ins.type_str))
+        return default
+
+    def _comp_cost(self, name: str) -> dict:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        zero = {"flops": 0.0, "hbm_bytes": 0.0,
+                "collectives": {k: 0.0 for k in _COLLECTIVES}}
+        if comp is None:
+            self._memo[name] = zero
+            return zero
+        total = {"flops": 0.0, "hbm_bytes": 0.0,
+                 "collectives": {k: 0.0 for k in _COLLECTIVES}}
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _ZERO_BYTE_OPS:
+                continue
+            total["hbm_bytes"] += self._instr_bytes(comp, ins)
+            if op == "dot":
+                total["flops"] += _dot_flops(ins, comp.shapes)
+            for kind in _COLLECTIVES:
+                if op == kind or op.startswith(kind):
+                    total["collectives"][kind] += _type_bytes(ins.type_str)
+            # recurse into called computations
+            called = _called_computations(ins.line)
+            if not called:
+                continue
+            mult = 1.0
+            if op == "while":
+                t = _TRIP_RE.search(ins.line)
+                mult = float(t.group(1)) if t else 1.0
+            for c in called:
+                sub = self._comp_cost(c)
+                if op == "fusion":
+                    # fusion internals: count flops (dots) but NOT bytes
+                    total["flops"] += sub["flops"]
+                    for k in _COLLECTIVES:
+                        total["collectives"][k] += sub["collectives"][k]
+                else:
+                    total["flops"] += mult * sub["flops"]
+                    total["hbm_bytes"] += mult * sub["hbm_bytes"]
+                    for k in _COLLECTIVES:
+                        total["collectives"][k] += mult * sub["collectives"][k]
+        self._memo[name] = total
+        return total
+
+
+def analyze_hlo(hlo: str) -> dict:
+    return HloCost(hlo).analyze()

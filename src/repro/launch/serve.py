@@ -1,0 +1,61 @@
+"""Production serving launcher: one speculative-decoding service per arch.
+
+Container mode runs the reduced config with random weights (smoke);
+cluster mode (--full-config) uses the production mesh shardings from
+launch/specs.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.heads import init_draft_params
+from repro.core.trees import chain_tree, default_tree
+from repro.launch.specs import tree_for
+from repro.models.model import init_params
+from repro.serving.engine import Request, SpeculativeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode service "
+                         "(DESIGN.md §4)")
+    if not args.full_config:
+        import dataclasses
+        cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
+
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = tree_for(cfg)
+    print(f"[serve] arch={cfg.name} tree={tree.size} "
+          f"(chain={tree.max_depth + 1 == tree.size})")
+
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=512)
+    rs = np.random.RandomState(0)
+    reqs = [Request(prompt=rs.randint(0, cfg.vocab_size,
+                                      args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.max_new_tokens)
+            for _ in range(args.batch)]
+    stats = eng.serve(reqs, max_batch=args.batch)
+    print(f"[serve] steps={stats.steps} tokens={stats.tokens} "
+          f"tok/step={stats.tokens_per_step:.2f} "
+          f"tok/s={stats.tokens_per_s:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Step functions + ShapeDtypeStruct input specs for every
+(architecture x input-shape) pair — consumed by launch/dryrun.py.
+
+No arrays are ever allocated here: params/optimizer/cache structures come
+from ``jax.eval_shape`` over the real init functions, and token/feature
+inputs are ShapeDtypeStructs. The same step functions are used by the real
+launchers (launch/train.py, launch/serve.py) with materialized arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.core.distill import lm_loss, masked_prediction_loss
+from repro.core.heads import init_draft_params, init_prefix_cache
+from repro.core.speculative import DecodeState, spec_decode_step
+from repro.core.trees import TreeSpec, chain_tree, default_tree
+from repro.distributed.sharding import (batch_axes, batch_spec_axis,
+                                        cache_shardings, params_shardings,
+                                        replicated, tokens_sharding)
+from repro.models.model import forward, init_cache, init_params
+from repro.training.optim import (adamw_update, clip_by_global_norm,
+                                  cosine_schedule, init_adamw)
+
+
+class LowerSpec(NamedTuple):
+    fn: Any                      # function to jit
+    args: tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    donate_argnums: tuple
+    note: str
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def tree_for(cfg: ModelConfig) -> Optional[TreeSpec]:
+    if not cfg.supports_decode:
+        return None
+    if cfg.block_kind in ("mamba2", "rwkv6"):
+        return chain_tree(cfg.draft.n_heads)      # chain speculation (DESIGN)
+    return default_tree(cfg.draft.tree_size, cfg.draft.max_children,
+                        cfg.draft.n_heads)
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    shp = INPUT_SHAPES[shape_name]
+    if shp.kind == "decode" and not cfg.supports_decode:
+        return "encoder-only: no autoregressive decode"
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention arch: long_500k requires sub-quadratic"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig):
+    if cfg.modality == "audio":
+        def loss_fn(p, batch):
+            return masked_prediction_loss(p, cfg, batch["features"],
+                                          batch["targets"], batch["mask"])
+    else:
+        def loss_fn(p, batch):
+            return lm_loss(p, cfg, batch["tokens"])
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        lr = cosine_schedule(opt_state.step, peak_lr=1e-3, warmup=100,
+                             total=10000)
+        params, opt_state = adamw_update(grads, opt_state, params, lr)
+        metrics = dict(metrics, grad_norm=gn, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        x = batch.get("tokens", batch.get("features"))
+        B = x.shape[0]
+        T = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        cache = init_cache(cfg, B, max_len)
+        out = forward(params, cfg, x, pos, mode="full", cache=cache,
+                      want_logits=False)
+        unembed = (params["embed"].T if cfg.tie_embeddings
+                   else params["lm_head"])
+        last_logits = (out.hidden[:, -1].astype(jnp.float32)
+                       @ unembed.astype(jnp.float32))
+        return out.cache, last_logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, tree: TreeSpec):
+    def serve_step(params, draft_params, state: DecodeState):
+        return spec_decode_step(params, draft_params, cfg, tree, state,
+                                criterion="greedy")
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# spec builders
+# ---------------------------------------------------------------------------
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def draft_param_structs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_draft_params(jax.random.PRNGKey(0), cfg))
+
+
+def decode_state_structs(cfg: ModelConfig, B: int, max_len: int,
+                         with_prefix: bool):
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, max_len))
+    pk = pv = None
+    if with_prefix:
+        pc = jax.eval_shape(lambda: init_prefix_cache(cfg, B, max_len))
+        pk, pv = pc["k"], pc["v"]
+    return DecodeState(
+        cache=cache,
+        cache_len=sds((B,), jnp.int32),
+        last_token=sds((B,), jnp.int32),
+        last_hidden=sds((B, cfg.d_model), cfg.dtype),
+        prefix_k=pk, prefix_v=pv,
+        rng=jax.eval_shape(lambda: jax.random.PRNGKey(0)),
+    )
+
+
+def batch_structs(cfg: ModelConfig, B: int, S: int):
+    if cfg.modality == "audio":
+        return {
+            "features": sds((B, S, cfg.d_model), cfg.dtype),
+            "targets": sds((B, S), jnp.int32),
+            "mask": sds((B, S), jnp.bool_),
+        }
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def batch_shardings(cfg: ModelConfig, mesh, B: int):
+    ts = tokens_sharding(mesh, B)
+    if cfg.modality == "audio":
+        bax = batch_spec_axis(mesh, B)
+        return {
+            "features": NamedSharding(mesh, P(bax, None, None)),
+            "targets": ts, "mask": ts,
+        }
+    return {"tokens": ts}
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh, state_structs, B: int):
+    cache_sh = cache_shardings(state_structs.cache, mesh, B)
+    bax = batch_spec_axis(mesh, B)
+    seq_ax = None if bax is not None else (batch_axes(mesh) or None)
+    vec = NamedSharding(mesh, P(bax))
+    mp = mesh.shape.get("model", 1)
+    pk_sh = pv_sh = None
+    if state_structs.prefix_k is not None:
+        h_ax = ("model" if state_structs.prefix_k.shape[2] % mp == 0
+                else None)
+        psp = NamedSharding(mesh, P(bax, seq_ax, h_ax, None))
+        pk_sh = pv_sh = psp
+    return DecodeState(
+        cache=cache_sh, cache_len=vec, last_token=vec,
+        last_hidden=NamedSharding(mesh, P(bax, None)),
+        prefix_k=pk_sh, prefix_v=pv_sh, rng=replicated(mesh))
+
+
+# ---------------------------------------------------------------------------
+# top-level: build everything needed to lower one (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+
+
+def build_lower_spec(cfg: ModelConfig, shape_name: str, mesh) -> LowerSpec:
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        raise ValueError(f"SKIP {cfg.name} x {shape_name}: {reason}")
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    pstructs = param_structs(cfg)
+    # §Perf iteration A (REFUTED — kept for the record): replicating ALL
+    # ragged-head attention projections at inference removes the mid-head
+    # all-reduce but forfeits 16-way attention parallelism. Superseded by
+    # pad_q_heads_to (config) + ragged-KV replication (always on). Opt in
+    # with REPRO_OPT_RAGGED_ATTN=1 to reproduce the refuted measurement.
+    import os
+    ragged_opt = (shp.kind != "train"
+                  and os.environ.get("REPRO_OPT_RAGGED_ATTN", "0") == "1")
+    psh = params_shardings(pstructs, mesh,
+                           head_dim=cfg.resolved_head_dim,
+                           replicate_ragged_attn=ragged_opt)
+
+    if shp.kind == "train":
+        opt_structs = jax.eval_shape(init_adamw, pstructs)
+        opt_sh = jax.tree.map(
+            lambda _: None, opt_structs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        opt_sh = type(opt_structs)(
+            step=replicated(mesh),
+            mu=params_shardings(opt_structs.mu, mesh),
+            nu=params_shardings(opt_structs.nu, mesh))
+        batch = batch_structs(cfg, B, S)
+        return LowerSpec(
+            fn=make_train_step(cfg),
+            args=(pstructs, opt_structs, batch),
+            in_shardings=(psh, opt_sh, batch_shardings(cfg, mesh, B)),
+            donate_argnums=(0, 1),
+            note=f"train_step B={B} S={S}")
+
+    if shp.kind == "prefill":
+        max_len = S + 64
+        batch = batch_structs(cfg, B, S)
+        return LowerSpec(
+            fn=make_prefill_step(cfg, max_len),
+            args=(pstructs, batch),
+            in_shardings=(psh, batch_shardings(cfg, mesh, B)),
+            donate_argnums=(),
+            note=f"prefill B={B} S={S}")
+
+    # decode: one speculative step against a seq_len cache
+    tree = tree_for(cfg)
+    max_len = S + 64
+    dstructs = draft_param_structs(cfg)
+    dsh = params_shardings(dstructs, mesh,
+                           head_dim=cfg.resolved_head_dim,
+                           replicate_ragged_attn=ragged_opt)
+    state = decode_state_structs(cfg, B, max_len,
+                                 with_prefix="prefix" in dstructs)
+    ssh = decode_state_shardings(cfg, mesh, state, B)
+    return LowerSpec(
+        fn=make_serve_step(cfg, tree),
+        args=(pstructs, dstructs, state),
+        in_shardings=(psh, dsh, ssh),
+        donate_argnums=(2,),
+        note=f"spec_decode_step B={B} cache={S} tree={tree.size}")

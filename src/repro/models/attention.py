@@ -1,0 +1,199 @@
+"""Attention blocks: GQA (optionally sliding-window, optionally encoder /
+bidirectional) and DeepSeek-V2 MLA (multi-head latent attention).
+
+Two execution modes:
+
+* full-seq (train / prefill): blocked flash-style attention over the whole
+  sequence; writes the KV cache when one is provided.
+* verify  (decode / speculative): T new tokens (a candidate tree or chain)
+  attend to the populated cache plus themselves under an ancestor mask.
+  New KV entries are written at ``cache_len + arange(T)`` — the speculative
+  scratch region; `commit` (serving/cache.py) compacts accepted entries.
+
+Param pytrees use a stacked leading layer axis when scanned.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (apply_rope, blocked_attention, dense_init,
+                                 masked_attention, rope_sincos)
+
+
+class AttnInputs(NamedTuple):
+    """Everything the attention core needs besides x and params."""
+
+    q_pos: jnp.ndarray                 # (B, T) absolute positions
+    cache_k: Optional[jnp.ndarray]     # (B, S, Hkv, D) or None
+    cache_v: Optional[jnp.ndarray]
+    cache_len: Optional[jnp.ndarray]   # (B,) valid length
+    tree_mask: Optional[jnp.ndarray]   # (T, T) ancestor-or-self bool
+    window: jnp.ndarray | int          # 0 => full attention
+    causal: bool
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq = cfg.n_heads_padded        # == n_heads unless pad_q_heads_to is set
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, hq * hd, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ko, hq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def gqa_fwd(p, cfg, x, ai: AttnInputs):
+    """Returns (out (B,T,d), new_k (B,T,Hkv,D), new_v) — caller owns cache."""
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.n_heads_padded, hd)
+    k = k.reshape(B, T, cfg.n_kv_heads, hd)
+    v = v.reshape(B, T, cfg.n_kv_heads, hd)
+
+    sin, cos = rope_sincos(ai.q_pos, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    if ai.cache_k is None:
+        # full-sequence path (train / prefill): blocked flash attention
+        kv_pos = ai.q_pos[0]  # assumes aligned positions across batch
+        out = blocked_attention(q, k, v, ai.q_pos, kv_pos,
+                                window=ai.window, causal=ai.causal)
+    else:
+        # verify/decode path: write new kv into scratch region then attend
+        S = ai.cache_k.shape[1]
+        slot = ai.cache_len[:, None] + jnp.arange(T)[None, :]        # (B,T)
+        bidx = jnp.arange(B)[:, None]
+        ck = ai.cache_k.at[bidx, slot].set(k.astype(ai.cache_k.dtype))
+        cv = ai.cache_v.at[bidx, slot].set(v.astype(ai.cache_v.dtype))
+        mask = _verify_mask(ai, B, T, S)
+        out = masked_attention(q, ck, cv, mask)
+        k, v = ck, cv  # return updated full cache
+    out = out.reshape(B, T, cfg.n_heads_padded * hd)
+    return out @ p["wo"], k, v
+
+
+def _verify_mask(ai: AttnInputs, B: int, T: int, S: int):
+    """(B, T, S) mask: past-cache causal+window plus tree ancestor block."""
+    kv_pos = jnp.arange(S)
+    in_past = kv_pos[None, :] < ai.cache_len[:, None]                 # (B,S)
+    j = kv_pos[None, :] - ai.cache_len[:, None]                       # (B,S)
+    in_tree = (j >= 0) & (j < T)
+    jc = jnp.clip(j, 0, T - 1)
+    if ai.tree_mask is not None:
+        tm = ai.tree_mask  # (T,T)
+    else:  # chain: lower-triangular
+        tm = jnp.tril(jnp.ones((T, T), bool))
+    tree_bit = tm[:, jc]                                              # (T,B,S)
+    tree_bit = jnp.transpose(tree_bit, (1, 0, 2))                     # (B,T,S)
+    mask = (in_past[:, None, :] & ~in_tree[:, None, :]) | (
+        in_tree[:, None, :] & tree_bit)
+    w = jnp.asarray(ai.window)
+    q_abs = ai.q_pos                                                  # (B,T)
+    win_ok = jnp.where(w > 0,
+                       q_abs[:, :, None] - kv_pos[None, None, :] < w,
+                       True)
+    return mask & win_ok
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank KV latent cache + decoupled RoPE key.
+# Cache stores (c_kv: (B,S,r), k_rope: (B,S,rd)) instead of full K/V.
+# Decode uses the absorbed formulation (score via latent, output via latent).
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": dense_init(ks[0], d, H * (m.qk_nope_dim + m.qk_rope_dim), dtype),
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank, dtype),
+        "w_krope": dense_init(ks[2], d, m.qk_rope_dim, dtype),
+        "w_uk": dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim, dtype),
+        "wo": dense_init(ks[5], H * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_fwd(p, cfg, x, ai: AttnInputs):
+    """Returns (out, new_ckv (B,S|T,r), new_krope (B,S|T,rd))."""
+    m = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    nd, rd, vd, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+
+    q = (x @ p["w_dq"]).reshape(B, T, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    c_kv = x @ p["w_dkv"]                                   # (B,T,r)
+    k_rope = x @ p["w_krope"]                               # (B,T,rd)
+
+    sin, cos = rope_sincos(ai.q_pos, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+
+    scale = 1.0 / np.sqrt(nd + rd)
+
+    if ai.cache_k is None:
+        # train/prefill: expand latent to full K/V, blocked attention
+        k_nope = (c_kv @ p["w_uk"]).reshape(B, T, H, nd)
+        v = (c_kv @ p["w_uv"]).reshape(B, T, H, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, rd))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad V up to qk dim for the shared kernel, then slice back
+        kv_pos = ai.q_pos[0]
+        out = blocked_attention(q_full, k, v, ai.q_pos, kv_pos,
+                                window=ai.window, causal=ai.causal,
+                                scale=scale)
+        out = out.reshape(B, T, H * vd)
+        return out @ p["wo"], c_kv, k_rope
+
+    # decode/verify: absorbed attention against the latent cache
+    S = ai.cache_k.shape[1]
+    slot = ai.cache_len[:, None] + jnp.arange(T)[None, :]
+    bidx = jnp.arange(B)[:, None]
+    ckv_all = ai.cache_k.at[bidx, slot].set(c_kv.astype(ai.cache_k.dtype))
+    krope_all = ai.cache_v.at[bidx, slot].set(k_rope.astype(ai.cache_v.dtype))
+
+    # absorbed: q' = q_nope @ W_uk^T per head -> score against latent directly
+    w_uk = p["w_uk"].reshape(r, H, nd)
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))            # (B,T,H,r)
+    s = jnp.einsum("bthr,bsr->bths", q_lat,
+                   ckv_all.astype(jnp.float32))
+    s = s + jnp.einsum("bthr,bsr->bths", q_rope.astype(jnp.float32),
+                       krope_all.astype(jnp.float32))
+    s = s * scale
+    mask = _verify_mask(ai, B, T, S)
+    s = jnp.where(mask[:, :, None, :], s, -jnp.inf)
+    pw = jax.nn.softmax(s, axis=-1)
+    pw = jnp.where(jnp.isnan(pw), 0.0, pw)
+    o_lat = jnp.einsum("bths,bsr->bthr", pw, ckv_all.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, H, vd)
+    out = jnp.einsum("bthr,rhv->bthv", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, T, H * vd).astype(x.dtype)
+    return out @ p["wo"], ckv_all, krope_all

@@ -1,0 +1,205 @@
+"""Shared layer primitives (pure functions over param pytrees, no flax).
+
+Conventions
+-----------
+* ``init_*`` returns a dict pytree of jnp arrays; ``*_fwd`` applies it.
+* Repeated layers store params stacked on a leading layer axis and are
+  executed with ``jax.lax.scan``.
+* Params live in ``cfg.dtype`` (bf16 for production archs); softmax, norms
+  and losses accumulate in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def group_norm(x, gamma, beta, n_groups: int, eps: float = 1e-5):
+    """GroupNorm over the channel dim (used by RWKV6 wkv output)."""
+    dt = x.dtype
+    *lead, c = x.shape
+    x32 = x.astype(jnp.float32).reshape(*lead, n_groups, c // n_groups)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    x32 = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    x32 = x32.reshape(*lead, c)
+    return (x32 * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_sincos(positions, dim: int, theta: float):
+    """positions: (...,) int -> sin/cos (..., dim/2) fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., n_heads, dim); sin/cos broadcastable (..., dim/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    sin = sin[..., None, :]  # broadcast over heads axis
+    cos = cos[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp_fwd(p, x):
+    g = jax.nn.silu(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) full-sequence attention — pure jnp, shardable;
+# memory bounded by the kv block size instead of S^2.
+# ---------------------------------------------------------------------------
+
+
+def blocked_attention(q, k, v, q_pos, kv_pos, *, window: jnp.ndarray | int = 0,
+                      causal: bool = True, kv_block: int = 1024,
+                      q_block: int = 512, scale: float | None = None,
+                      kv_valid_len=None):
+    """Online-softmax attention, scanning over KV blocks, additionally
+    blocked (and rematerialized) over Q so the backward working set is
+    bounded by one (q_block x kv_block) tile per layer.
+
+    q: (B, Tq, Hq, D); k/v: (B, S, Hkv, D); q_pos: (B, Tq) absolute positions;
+    kv_pos: (S,) absolute positions. window: 0 => full; >0 => sliding window
+    (q attends kv iff q_pos - kv_pos < window). kv_valid_len: (B,) mask out
+    kv entries >= len (for padded caches).
+    Returns (B, Tq, Hq, D).
+    """
+    B, Tq = q.shape[:2]
+    if Tq % q_block == 0 and Tq > q_block:
+        nqb = Tq // q_block
+        qs = q.reshape(B, nqb, q_block, *q.shape[2:]).swapaxes(0, 1)
+        ps = q_pos.reshape(B, nqb, q_block).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def qbody(_, xs):
+            qb, pb = xs
+            out = _blocked_attention_inner(
+                qb, k, v, pb, kv_pos, window=window, causal=causal,
+                kv_block=kv_block, scale=scale, kv_valid_len=kv_valid_len)
+            return None, out
+
+        _, ob = jax.lax.scan(qbody, None, (qs, ps))
+        return ob.swapaxes(0, 1).reshape(B, Tq, *ob.shape[3:])
+    return _blocked_attention_inner(q, k, v, q_pos, kv_pos, window=window,
+                                    causal=causal, kv_block=kv_block,
+                                    scale=scale, kv_valid_len=kv_valid_len)
+
+
+def _blocked_attention_inner(q, k, v, q_pos, kv_pos, *, window, causal,
+                             kv_block, scale, kv_valid_len):
+    B, Tq, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    if S % kv_block != 0:
+        kv_block = S  # fall back to a single block for odd sizes (tests)
+    nb = max(S // kv_block, 1)
+    kb = min(kv_block, S)
+    # (nb, B, kb, Hkv, D)
+    k_b = k.reshape(B, nb, kb, Hkv, D).swapaxes(0, 1)
+    v_b = v.reshape(B, nb, kb, Hkv, Dv).swapaxes(0, 1)
+    pos_b = kv_pos.reshape(nb, kb)
+
+    qf = (q * scale).astype(jnp.float32).reshape(B, Tq, Hkv, G, D)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kj, vj, pj = blk
+        s = jnp.einsum("bthgd,bshd->bthgs", qf, kj.astype(jnp.float32))
+        mask = jnp.ones((B, Tq, kb), dtype=bool)
+        if causal:
+            mask &= pj[None, None, :] <= q_pos[:, :, None]
+        w_arr = jnp.asarray(window)
+        mask &= jnp.where(w_arr > 0,
+                          q_pos[:, :, None] - pj[None, None, :] < w_arr,
+                          True)
+        if kv_valid_len is not None:
+            mask &= pj[None, None, :] < kv_valid_len[:, None, None]
+        s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bthgs,bshd->bthgd", p, vj.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Tq, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Tq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Tq, Hkv, G, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (k_b, v_b, pos_b))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Tq, Hq, Dv).astype(q.dtype)
+
+
+def masked_attention(q, k, v, mask, scale: float | None = None):
+    """Small-T attention with an explicit mask (decode / tree verify).
+
+    q: (B, T, Hq, D); k/v: (B, S, Hkv, D); mask: (B, T, S) bool.
+    """
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qf = (q * scale).astype(jnp.float32).reshape(B, T, Hkv, G, D)
+    s = jnp.einsum("bthgd,bshd->bthgs", qf, k.astype(jnp.float32))
+    s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bthgs,bshd->bthgd", p, v.astype(jnp.float32))
+    return out.reshape(B, T, Hq, Dv).astype(q.dtype)

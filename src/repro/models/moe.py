@@ -1,0 +1,87 @@
+"""DeepSeek-style fine-grained MoE: shared experts + routed top-k experts.
+
+Dispatch is sort/scatter-based (MaxText-style), not one-hot-einsum, so routed
+FLOPs scale with E * C * d * d_e rather than N * E * C * d:
+
+  1. router softmax -> top_k (expert id, weight) per token
+  2. tokens are placed into a per-expert capacity buffer (static capacity C);
+     overflow tokens are dropped (their routed contribution is zero — the
+     shared experts and residual still apply)
+  3. batched expert GEMMs over (E, C, d)
+  4. results scattered back with combine weights
+
+The expert axis is sharded over the 'model' mesh axis (expert parallelism);
+GSPMD turns the scatter/gather resharding into an all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_mlp, mlp_fwd
+
+
+def init_moe(key, cfg, dtype):
+    mo = cfg.moe
+    d = cfg.d_model
+    k_r, k_sh, k_e1, k_e2, k_e3 = jax.random.split(key, 5)
+    p = {"router": dense_init(k_r, d, mo.n_routed, jnp.float32)}
+    # routed experts: stacked (E, ...)
+    keys = jax.random.split(k_e1, mo.n_routed)
+    p["w_gate"] = jax.vmap(lambda k: dense_init(k, d, mo.d_expert, dtype))(keys)
+    keys = jax.random.split(k_e2, mo.n_routed)
+    p["w_up"] = jax.vmap(lambda k: dense_init(k, d, mo.d_expert, dtype))(keys)
+    keys = jax.random.split(k_e3, mo.n_routed)
+    p["w_down"] = jax.vmap(lambda k: dense_init(k, mo.d_expert, d, dtype))(keys)
+    if mo.n_shared:
+        p["shared"] = init_mlp(k_sh, d, mo.d_expert * mo.n_shared, dtype)
+    return p
+
+
+def moe_fwd(p, cfg, x, *, capacity_factor: float = 1.25):
+    """x: (B, T, d) -> (out, aux_loss). Routed top-k + shared experts."""
+    mo = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    E, K = mo.n_routed, mo.top_k
+    xf = x.reshape(N, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                   # (N, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch-style) -----------------------------
+    me = probs.mean(0)                                       # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (N * K))
+    aux = E * jnp.sum(me * ce) * mo.router_aux_coef
+
+    # ---- capacity assignment via one cumsum over one-hot -------------------
+    C = int(max(8, (N * K * capacity_factor) // E))
+    flat_e = top_e.reshape(N * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (NK, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)         # rank within expert
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = flat_e * C + jnp.where(keep, pos, 0)              # (NK,)
+
+    buf = jnp.zeros((E * C, d), x.dtype)
+    tok = jnp.repeat(xf, K, axis=0)                          # token per (n,k)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], tok, 0))
+    buf = buf.reshape(E, C, d)
+
+    # ---- expert GEMMs -------------------------------------------------------
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    eo = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])      # (E, C, d)
+    eo = eo.reshape(E * C, d)
+
+    # ---- combine ------------------------------------------------------------
+    gathered = eo[slot]                                      # (NK, d)
+    w = (top_w.reshape(N * K) * keep).astype(jnp.float32)
+    out = (gathered.astype(jnp.float32) * w[:, None]).reshape(N, K, d).sum(1)
+
+    if "shared" in p:
+        out = out + mlp_fwd(p["shared"], xf).astype(jnp.float32)
+    return out.reshape(B, T, d).astype(x.dtype), aux

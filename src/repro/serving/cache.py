@@ -1,0 +1,71 @@
+"""Cache commit logic for speculative decoding.
+
+After a verify forward pass the per-group caches hold *candidates*:
+
+  attention groups ('k'/'v'): the full cache arrays with all T tree tokens
+    written in the scratch region [len, len+T); commit compacts the accepted
+    root-path entries to [len, len+n_accept+1).
+  state groups ('ssd_state'/'conv_win'/'wkv_state'/'shift_*'): stacked
+    per-token candidate states on a T axis; commit selects the state of the
+    last accepted node.
+
+Both rules are pure gathers — no recompute — which is what makes chain
+speculation on SSM/hybrid architectures cheap (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ATTN_KEYS = {"k", "v"}
+
+
+def _commit_attn(arr, cache_len, path_nodes, *, has_layer_axis: bool):
+    """arr: (L,B,S,...) or (B,S,...). Gather accepted tree slots to the
+    front of the scratch region."""
+    if not has_layer_axis:
+        arr = arr[None]
+    L, B, S = arr.shape[:3]
+    D1 = path_nodes.shape[1]
+    bidx = jnp.arange(B)[:, None]                          # (B,1)
+    src = jnp.minimum(cache_len[:, None] + path_nodes, S - 1)   # (B,D1)
+    dst = jnp.minimum(cache_len[:, None] + jnp.arange(D1)[None, :], S - 1)
+    vals = arr[:, bidx, src]                               # (L,B,D1,...)
+    out = arr.at[:, bidx, dst].set(vals)
+    return out if has_layer_axis else out[0]
+
+
+def _commit_state(arr, last_node):
+    """arr: (L,B,T,...) per-token candidates -> select last accepted node."""
+    L, B, T = arr.shape[:3]
+    bidx = jnp.arange(B)
+    return arr[:, bidx, jnp.minimum(last_node, T - 1)]     # (L,B,...)
+
+
+def commit_cache(candidates, cache_len, path_nodes, n_accept):
+    """candidates: cache pytree from a verify forward. Returns the committed
+    cache (same structure as the pre-verify committed cache)."""
+    last_node = jnp.take_along_axis(path_nodes, n_accept[:, None],
+                                    axis=1)[:, 0]          # (B,)
+    out = []
+    for group in candidates:
+        g = {}
+        for key, arr in group.items():
+            if key in ATTN_KEYS:
+                g[key] = _commit_attn(arr, cache_len, path_nodes,
+                                      has_layer_axis=True)
+            else:
+                g[key] = _commit_state(arr, last_node)
+        out.append(g)
+    return out
+
+
+def commit_prefix_cache(k, v, cache_len, path_nodes):
+    """PrefixAttention cache: accepted hiddens were processed as a CHAIN in
+    path order, so entry j in the scratch region corresponds to path step j
+    — compaction is the identity gather with arange."""
+    D1 = path_nodes.shape[1]
+    ar = jnp.broadcast_to(jnp.arange(D1)[None, :],
+                          (k.shape[0], D1))
+    nk = _commit_attn(k, cache_len, ar, has_layer_axis=False)
+    nv = _commit_attn(v, cache_len, ar, has_layer_axis=False)
+    return nk, nv

@@ -1,0 +1,40 @@
+"""Minimal pytree checkpointing: npz arrays + msgpack tree structure."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def save_checkpoint(path: str, pytree: Any) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(pytree)
+    arrays = {f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    meta = {
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "dtypes": [str(np.asarray(v).dtype) for v in leaves],
+    }
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes must match)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = jax.tree.flatten(like)
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    assert meta["n_leaves"] == len(leaves), "structure mismatch"
+    new_leaves = []
+    for i, leaf in enumerate(leaves):
+        arr = data[f"a{i}"]
+        assert arr.shape == tuple(leaf.shape), \
+            f"leaf {i}: ckpt {arr.shape} vs model {leaf.shape}"
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree.unflatten(treedef, new_leaves)

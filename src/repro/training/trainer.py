@@ -1,0 +1,102 @@
+"""Training loops: base-model pretraining and frozen-base draft-head
+training (paper §5: heads train with the base frozen; Hydra/Medusa 1 epoch,
+Hydra++ longer, cosine LR, AdamW).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.distill import head_train_loss, lm_loss
+from repro.training.optim import (adamw_update, clip_by_global_norm,
+                                  cosine_schedule, init_adamw)
+
+
+@dataclass
+class TrainConfig:
+    peak_lr: float = 1e-3
+    warmup: int = 50
+    total_steps: int = 500
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.999
+    log_every: int = 50
+
+
+def make_base_train_step(cfg: ModelConfig, tc: TrainConfig):
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch), has_aux=True)(params)
+        grads, gn = clip_by_global_norm(grads, tc.clip_norm)
+        lr = cosine_schedule(opt_state.step, peak_lr=tc.peak_lr,
+                             warmup=tc.warmup, total=tc.total_steps)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr, b1=tc.b1, b2=tc.b2,
+            weight_decay=tc.weight_decay)
+        metrics = dict(metrics, grad_norm=gn, lr=lr)
+        return params, opt_state, metrics
+    return jax.jit(step)
+
+
+def make_head_train_step(cfg: ModelConfig, tc: TrainConfig, *,
+                         objective: str = "data",
+                         noise_alpha: float = 0.0):
+    def step(draft_params, base_params, opt_state, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda dp: head_train_loss(dp, base_params, cfg, batch,
+                                       objective=objective,
+                                       noise_alpha=noise_alpha, rng=rng),
+            has_aux=True)(draft_params)
+        grads, gn = clip_by_global_norm(grads, tc.clip_norm)
+        lr = cosine_schedule(opt_state.step, peak_lr=tc.peak_lr,
+                             warmup=tc.warmup, total=tc.total_steps)
+        draft_params, opt_state = adamw_update(
+            grads, opt_state, draft_params, lr, b1=tc.b1, b2=tc.b2,
+            weight_decay=tc.weight_decay)
+        metrics = dict(metrics, grad_norm=gn, lr=lr)
+        return draft_params, opt_state, metrics
+    return jax.jit(step)
+
+
+def train_base(params, cfg: ModelConfig, tc: TrainConfig, batches,
+               *, log: Optional[Callable] = print):
+    step_fn = make_base_train_step(cfg, tc)
+    opt = init_adamw(params)
+    t0 = time.time()
+    metrics = {}
+    for i, batch in enumerate(batches):
+        params, opt, metrics = step_fn(params, opt, jnp.asarray(batch))
+        if log and (i % tc.log_every == 0 or i == tc.total_steps - 1):
+            log(f"[base {i:5d}] loss={float(metrics['loss']):.4f} "
+                f"acc={float(metrics['acc']):.3f} "
+                f"({time.time()-t0:.1f}s)")
+    return params, metrics
+
+
+def train_heads(draft_params, base_params, cfg: ModelConfig,
+                tc: TrainConfig, batches, *, objective: str = "data",
+                noise_alpha: float = 0.0, rng=None,
+                log: Optional[Callable] = print):
+    step_fn = make_head_train_step(cfg, tc, objective=objective,
+                                   noise_alpha=noise_alpha)
+    opt = init_adamw(draft_params)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    t0 = time.time()
+    metrics = {}
+    for i, batch in enumerate(batches):
+        rng, sub = jax.random.split(rng)
+        draft_params, opt, metrics = step_fn(
+            draft_params, base_params, opt, jnp.asarray(batch), sub)
+        if log and (i % tc.log_every == 0 or i == tc.total_steps - 1):
+            hk = [k for k in metrics if k.endswith("_acc")]
+            accs = " ".join(f"{k}={float(metrics[k]):.3f}" for k in
+                            sorted(hk))
+            log(f"[heads {i:5d}] loss={float(metrics['loss']):.4f} {accs} "
+                f"({time.time()-t0:.1f}s)")
+    return draft_params, metrics

@@ -1,0 +1,17 @@
+import dataclasses
+
+import jax
+import pytest
+
+# Tests run on the single host CPU device — the 512-device forcing lives
+# ONLY in launch/dryrun.py (see DESIGN.md).
+assert "force_host_platform" not in str(jax.config.jax_platforms or "")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def fp32(cfg):
+    return dataclasses.replace(cfg, dtype="float32")

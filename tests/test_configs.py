@@ -1,0 +1,72 @@
+"""Config-system tests: registry completeness, assigned hyperparameters,
+reduced() smoke-variant constraints."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_configs
+
+ASSIGNED = {
+    "minitron-4b": dict(n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+                        d_ff=9216, vocab_size=256000),
+    "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32,
+                        n_kv_heads=32, d_ff=8192, vocab_size=32000),
+    "hubert-xlarge": dict(n_layers=48, d_model=1280, n_heads=16,
+                          n_kv_heads=16, d_ff=5120, vocab_size=504),
+    "qwen2.5-32b": dict(n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8,
+                        d_ff=27648, vocab_size=152064),
+    "starcoder2-7b": dict(n_layers=32, d_model=4608, n_heads=36,
+                          n_kv_heads=4, d_ff=18432, vocab_size=49152),
+    "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048, n_heads=16,
+                                 n_kv_heads=16, d_ff=1408,
+                                 vocab_size=102400),
+    "deepseek-moe-16b": dict(n_layers=28, d_model=2048, n_heads=16,
+                             n_kv_heads=16, d_ff=1408, vocab_size=102400),
+    "rwkv6-1.6b": dict(n_layers=24, d_model=2048, d_ff=7168,
+                       vocab_size=65536),
+    "chameleon-34b": dict(n_layers=48, d_model=8192, n_heads=64,
+                          n_kv_heads=8, d_ff=22016, vocab_size=65536),
+    "gemma3-1b": dict(n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1,
+                      d_ff=6912, vocab_size=262144),
+}
+
+
+def test_all_assigned_archs_registered():
+    names = set(list_configs())
+    assert set(ASSIGNED) <= names
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_assigned_hparams_exact(name):
+    cfg = get_config(name)
+    for k, v in ASSIGNED[name].items():
+        assert getattr(cfg, k) == v, f"{name}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_arch_specifics():
+    assert get_config("qwen2.5-32b").qkv_bias
+    assert get_config("deepseek-v2-lite-16b").mla.kv_lora_rank == 512
+    mo = get_config("deepseek-moe-16b").moe
+    assert (mo.n_routed, mo.n_shared, mo.top_k) == (64, 2, 6)
+    g = get_config("gemma3-1b")
+    assert g.window_pattern == (512, 512, 512, 512, 512, 0)  # 5:1
+    assert get_config("zamba2-1.2b").ssm.d_state == 64
+    assert get_config("rwkv6-1.6b").block_kind == "rwkv6"
+    assert get_config("hubert-xlarge").encoder_only
+    assert get_config("chameleon-34b").modality == "vlm"
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_reduced_constraints(name):
+    r = get_config(name).reduced()
+    assert r.n_layers <= 2
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.n_routed <= 4
+    assert r.vocab_size <= 512
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,101 @@
+"""Serving engine + tree-search (§4) tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.tree_search import (expected_accept_length, grow_trees,
+                                    measure_rank_acc, select_tree)
+from repro.core.trees import default_tree
+from repro.core.heads import init_draft_params
+from repro.models.model import init_params
+from repro.serving.engine import Request, SpeculativeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    rng = jax.random.PRNGKey(0)
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    return cfg, params, dp
+
+
+def test_engine_serves_batches(tiny):
+    cfg, params, dp = tiny
+    tree = default_tree(8, 2, 3)
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=256)
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, 16).astype(np.int32),
+                    max_new_tokens=12) for _ in range(4)]
+    stats = eng.serve(reqs, max_batch=2)
+    assert all(len(r.output) >= 12 for r in reqs)
+    assert stats.steps > 0 and stats.tokens > 0
+    assert stats.tokens_per_step >= 1.0
+
+
+def test_engine_bucketing():
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=np.zeros(l, np.int32)) for l in
+            (8, 8, 8, 16, 16, 24)]
+    buckets = list(SpeculativeEngine.bucket(reqs, max_batch=2))
+    sizes = sorted(len(b) for b in buckets)
+    assert sizes == [1, 1, 2, 2]  # 8s -> 2+1, 16s -> 2, 24 -> 1
+
+
+def test_engine_ar_baseline_matches_spec_greedy(tiny):
+    cfg, params, dp = tiny
+    tree = default_tree(8, 2, 3)
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab_size, 16).astype(np.int32)
+    out = {}
+    for spec_on in (True, False):
+        eng = SpeculativeEngine(params, dp if spec_on else None, cfg, tree,
+                                max_len=256, use_speculative=spec_on)
+        r = Request(prompt=prompt.copy(), max_new_tokens=12)
+        eng.serve([r], max_batch=1)
+        out[spec_on] = r.output[:12]
+    assert out[True] == out[False]
+
+
+# ---------------------------------------------------------------------------
+# tree search (§4)
+# ---------------------------------------------------------------------------
+
+
+def test_grow_trees_nested_and_monotone():
+    acc = np.array([[0.7, 0.2, 0.06, 0.02],
+                    [0.55, 0.15, 0.05, 0.02],
+                    [0.45, 0.12, 0.04, 0.01],
+                    [0.4, 0.1, 0.03, 0.01]])
+    trees = grow_trees(acc, n_max=20, max_children=4)
+    assert len(trees) == 20
+    sizes = [t.size for t in trees]
+    assert sizes == sorted(sizes)
+    eas = [expected_accept_length(t, acc) for t in trees]
+    assert all(b >= a - 1e-9 for a, b in zip(eas, eas[1:])), \
+        "expected acceptance must be monotone in tree growth"
+    # greedy first pick = rank-0 depth-1 child
+    assert trees[0].size == 2 and trees[0].max_depth == 1
+
+
+def test_select_tree_prefers_small_when_cost_high():
+    acc = np.array([[0.7, 0.2], [0.5, 0.1]])
+    trees = grow_trees(acc, n_max=10, max_children=2)
+    cheap = select_tree(trees, acc, step_cost_per_node=0.0)
+    pricey = select_tree(trees, acc, step_cost_per_node=10.0)
+    assert pricey.size <= cheap.size
+
+
+def test_measure_rank_acc_shapes(tiny):
+    cfg, params, dp = tiny
+    toks = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (2, 48)).astype(np.int32))
+    acc = measure_rank_acc(params, dp, cfg, toks, max_rank=4)
+    assert acc.shape == (cfg.draft.n_heads, 4)
+    assert np.all(acc >= 0) and np.all(acc <= 1)
+    # rank-r hit rates are disjoint events: their sum <= 1
+    assert np.all(acc.sum(1) <= 1.0 + 1e-6)

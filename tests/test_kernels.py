@@ -1,0 +1,168 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps against
+the pure-jnp ref.py oracles, per-kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.linear_attn_chunk.kernel import linear_attn_chunk
+from repro.kernels.linear_attn_chunk.ops import linear_attn_bshd
+from repro.kernels.linear_attn_chunk.ref import linear_attn_ref
+from repro.kernels.tree_attention.kernel import tree_attention
+from repro.kernels.tree_attention.ops import tree_attention_bshd
+from repro.kernels.tree_attention.ref import tree_attention_ref
+from repro.core.trees import default_tree
+
+
+def _rand(key, i, shape, dtype):
+    return jax.random.normal(jax.random.fold_in(key, i), shape, jnp.float32
+                             ).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 2, 2, 128, 64), (2, 4, 2, 256, 64), (1, 8, 1, 256, 128),
+    (2, 4, 4, 512, 32),
+])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, B, Hq, Hkv, S, D, window, dtype):
+    q = _rand(rng, 0, (B, Hq, S, D), dtype)
+    k = _rand(rng, 1, (B, Hkv, S, D), dtype)
+    v = _rand(rng, 2, (B, Hkv, S, D), dtype)
+    o = flash_attention(q, k, v, window=window, bq=128, bk=128,
+                        interpret=True)
+    ref = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_bshd_wrapper(rng):
+    B, S, Hq, Hkv, D = 2, 128, 4, 2, 64
+    q = _rand(rng, 0, (B, S, Hq, D), jnp.float32)
+    k = _rand(rng, 1, (B, S, Hkv, D), jnp.float32)
+    v = _rand(rng, 2, (B, S, Hkv, D), jnp.float32)
+    o = flash_attention_bshd(q, k, v)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(o.transpose(0, 2, 1, 3)),
+                               np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tree attention
+# ---------------------------------------------------------------------------
+
+
+def _tree_mask(T, seed=0):
+    rng = np.random.RandomState(seed)
+    parent = np.array([-1] + [rng.randint(0, i) for i in range(1, T)])
+    tm = np.eye(T, dtype=bool)
+    for i in range(1, T):
+        j = parent[i]
+        while j >= 0:
+            tm[i, j] = True
+            j = parent[j]
+    return jnp.asarray(tm)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,T,D", [
+    (1, 2, 1, 256, 8, 64), (2, 4, 2, 512, 16, 64), (1, 4, 4, 512, 32, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tree_attention_sweep(rng, B, Hq, Hkv, S, T, D, dtype):
+    q = _rand(rng, 0, (B, Hq, T, D), dtype)
+    ck = _rand(rng, 1, (B, Hkv, S, D), dtype)
+    cv = _rand(rng, 2, (B, Hkv, S, D), dtype)
+    tk = _rand(rng, 3, (B, Hkv, T, D), dtype)
+    tv = _rand(rng, 4, (B, Hkv, T, D), dtype)
+    tm = _tree_mask(T)
+    lens = jnp.asarray(np.random.RandomState(1).randint(1, S - T, B),
+                       jnp.int32)
+    o = tree_attention(q, ck, cv, tk, tv, tm, lens, bk=128, interpret=True)
+    ref = tree_attention_ref(q, ck, cv, tk, tv, tm, lens)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_tree_attention_padding_wrapper(rng):
+    """ops.py pads T to a sublane multiple; result must be exact."""
+    B, T, Hq, Hkv, S, D = 2, 13, 2, 1, 256, 64
+    tree = default_tree(13, 4, 4)
+    tm = jnp.asarray(tree.ancestor_mask)
+    q = _rand(rng, 0, (B, T, Hq, D), jnp.float32)
+    ck = _rand(rng, 1, (B, S, Hkv, D), jnp.float32)
+    cv = _rand(rng, 2, (B, S, Hkv, D), jnp.float32)
+    tk = _rand(rng, 3, (B, T, Hkv, D), jnp.float32)
+    tv = _rand(rng, 4, (B, T, Hkv, D), jnp.float32)
+    lens = jnp.array([7, 100], jnp.int32)
+    o = tree_attention_bshd(q, ck, cv, tk, tv, tm, lens)
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    ref = tree_attention_ref(tr(q), tr(ck), tr(cv), tr(tk), tr(tv), tm, lens)
+    np.testing.assert_allclose(np.asarray(tr(o)), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear attention chunk (rwkv6 / mamba2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,S,dk,dv,chunk", [
+    (1, 2, 128, 32, 32, 32), (2, 3, 256, 64, 64, 64), (1, 2, 256, 32, 64, 64),
+])
+@pytest.mark.parametrize("use_u", [True, False])
+def test_linear_attn_sweep(rng, B, H, S, dk, dv, chunk, use_u):
+    q = _rand(rng, 0, (B, H, S, dk), jnp.float32)
+    k = _rand(rng, 1, (B, H, S, dk), jnp.float32)
+    v = _rand(rng, 2, (B, H, S, dv), jnp.float32)
+    w = -jnp.exp(_rand(rng, 3, (B, H, S, dk), jnp.float32) * 0.5)
+    u = _rand(rng, 4, (H, dk), jnp.float32) * 0.1 if use_u else None
+    o = linear_attn_chunk(q, k, v, w, u, chunk=chunk, use_u=use_u,
+                          interpret=True)
+    ref = linear_attn_ref(q, k, v, w, u)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+    assert float(jnp.max(jnp.abs(o - ref))) / scale < 1e-4
+
+
+def test_linear_attn_strong_decay(rng):
+    """Strong decays are the numerically dangerous regime (the pairwise
+    intra-chunk form exists exactly for this)."""
+    B, H, S, d = 1, 2, 128, 32
+    q = _rand(rng, 0, (B, H, S, d), jnp.float32)
+    k = _rand(rng, 1, (B, H, S, d), jnp.float32)
+    v = _rand(rng, 2, (B, H, S, d), jnp.float32)
+    w = -jnp.exp(_rand(rng, 3, (B, H, S, d), jnp.float32) * 1.5 + 1.0)
+    o = linear_attn_chunk(q, k, v, w, None, chunk=64, use_u=False,
+                          interpret=True)
+    ref = linear_attn_ref(q, k, v, w, None)
+    assert bool(jnp.all(jnp.isfinite(o)))
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+    assert float(jnp.max(jnp.abs(o - ref))) / scale < 1e-3
+
+
+def test_linear_attn_bshd_padding(rng):
+    """S not a chunk multiple: ops.py pads with decay-1/k-0 (exact)."""
+    B, S, H, d = 2, 100, 2, 32
+    q = _rand(rng, 0, (B, S, H, d), jnp.float32)
+    k = _rand(rng, 1, (B, S, H, d), jnp.float32)
+    v = _rand(rng, 2, (B, S, H, d), jnp.float32)
+    w = -jnp.exp(_rand(rng, 3, (B, S, H, d), jnp.float32) * 0.5)
+    o = linear_attn_bshd(q, k, v, w, None, chunk=64)
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    ref = linear_attn_ref(tr(q), tr(k), tr(v), tr(w), None)
+    np.testing.assert_allclose(np.asarray(tr(o)), np.asarray(ref),
+                               atol=1e-4, rtol=1e-3)

@@ -1,0 +1,106 @@
+"""Sharding-rule and HLO-cost-parser tests (no multi-device runtime needed:
+rules are tested against an AbstractMesh; the parser against an HLO
+literal)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed.sharding import spec_for_param
+from repro.launch.hlo_cost import analyze_hlo
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+
+
+class _Key:
+    def __init__(self, k):
+        self.key = k
+
+
+def _spec(path_keys, shape):
+    leaf = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+    return spec_for_param([_Key(k) for k in path_keys], leaf, MESH)
+
+
+def test_embed_vocab_parallel():
+    assert _spec(["embed"], (262144, 1152)) == P("model", None)
+    # indivisible vocab falls back to replication (hubert: 504)
+    assert _spec(["embed"], (504, 1280)) == P(None, None)
+
+
+def test_stacked_layer_params_left_padded():
+    assert _spec(["groups", "attn", "wq"], (26, 1152, 1024)) == \
+        P(None, None, "model")
+    assert _spec(["groups", "mlp", "w_down"], (26, 6912, 1152)) == \
+        P(None, "model", None)
+
+
+def test_moe_expert_parallel():
+    # routed experts: expert axis sharded
+    assert _spec(["groups", "moe", "w_gate"], (26, 64, 2048, 1408)) == \
+        P(None, "model", None, None)
+    # shared expert MLP: normal tensor parallel
+    assert _spec(["groups", "moe", "shared", "w_gate"],
+                 (26, 2048, 2816)) == P(None, None, "model")
+
+
+def test_unknown_param_replicates():
+    assert _spec(["groups", "mamba", "conv_w"], (38, 4, 544)) == P()
+
+
+def test_indivisible_dim_dropped():
+    # 40 heads * 128 = 5120 divisible; but a raw head-count dim 40 is not
+    assert _spec(["wq"], (5120, 5120)) == P(None, "model")
+    assert _spec(["wq"], (512, 40)) == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# HLO cost parser
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+
+%body (p: (s32[], f32[8,64], f32[4,512,64])) -> (s32[], f32[8,64], f32[4,512,64]) {
+  %p = (s32[], f32[8,64]{1,0}, f32[4,512,64]{2,1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %h = f32[8,64]{1,0} get-tuple-element(%p), index=1
+  %w = f32[4,512,64]{2,1,0} get-tuple-element(%p), index=2
+  %ws = f32[1,512,64]{2,1,0} dynamic-slice(%w, %i), dynamic_slice_sizes={1,512,64}
+  %wsr = f32[512,64]{1,0} bitcast(%ws)
+  %hg = f32[8,512]{1,0} all-gather(%h), dimensions={1}
+  %dot = f32[8,64]{1,0} dot(%hg, %wsr), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,64]{1,0}, f32[4,512,64]{2,1,0}) tuple(%i, %dot, %w)
+}
+
+%cond (cp: (s32[], f32[8,64], f32[4,512,64])) -> pred[] {
+  %cp = (s32[], f32[8,64]{1,0}, f32[4,512,64]{2,1,0}) parameter(0)
+  %ci = s32[] get-tuple-element(%cp), index=0
+  %k = s32[] constant(4)
+  ROOT %lt = pred[] compare(%ci, %k), direction=LT
+}
+
+ENTRY %main (a: f32[8,64], w: f32[4,512,64]) -> f32[8,64] {
+  %a = f32[8,64]{1,0} parameter(0)
+  %w = f32[4,512,64]{2,1,0} parameter(1)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[8,64]{1,0}, f32[4,512,64]{2,1,0}) tuple(%z, %a, %w)
+  %wh = (s32[], f32[8,64]{1,0}, f32[4,512,64]{2,1,0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+  ROOT %out = f32[8,64]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_hlo_parser_trip_count_scaling():
+    res = analyze_hlo(HLO_SAMPLE)
+    # dot: 2 * 8 * 64 * 512 per iteration, 4 iterations
+    assert res["flops"] == 4 * 2 * 8 * 64 * 512
+    # all-gather result bytes: 8*512*4 per iter * 4 iters
+    assert res["collectives"]["all-gather"] == 4 * 8 * 512 * 4
+    # dynamic-slice charged at slice size (2x), NOT full buffer x trips
+    assert res["hbm_bytes"] < 4 * (4 * 512 * 64 * 4) * 2
+
+
+def test_hlo_parser_no_entry():
+    assert analyze_hlo("HloModule empty")["flops"] == 0.0

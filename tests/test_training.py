@@ -1,0 +1,134 @@
+"""Optimizer, schedule, head-training alignment and checkpoint tests."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import DraftConfig
+from repro.core.distill import head_train_loss, lm_loss
+from repro.core.heads import init_draft_params
+from repro.data.synthetic import MarkovSpec, DataPipeline, sample_corpus
+from repro.models.model import init_params
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optim import (adamw_update, clip_by_global_norm,
+                                  cosine_schedule, init_adamw)
+from repro.training.trainer import TrainConfig, make_head_train_step
+
+
+def test_adamw_converges_quadratic():
+    params = {"x": jnp.array([5.0, -3.0])}
+    opt = init_adamw(params)
+    for _ in range(300):
+        g = {"x": 2 * params["x"]}
+        params, opt = adamw_update(g, opt, params, 0.1)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    s = lambda t: float(cosine_schedule(jnp.asarray(t), peak_lr=1.0,
+                                        warmup=10, total=110))
+    assert s(0) == 0.0
+    assert abs(s(10) - 1.0) < 1e-6
+    assert s(60) < 1.0
+    assert s(110) < 1e-6 + 0.0 + 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - np.sqrt(1000.0)) < 1e-3
+    n = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert abs(n - 1.0) < 1e-4
+
+
+def test_lm_loss_chunked_equals_unchunked(rng):
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+    params = init_params(rng, cfg)
+    toks = jax.random.randint(rng, (2, 64), 0, cfg.vocab_size)
+    l1, _ = lm_loss(params, cfg, toks, logit_chunk=16)
+    l2, _ = lm_loss(params, cfg, toks, logit_chunk=64)
+    assert abs(float(l1) - float(l2)) < 1e-4
+
+
+def test_head_loss_gradients_only_on_draft(rng):
+    """The base model is frozen: grads flow only into draft params."""
+    cfg = dataclasses.replace(
+        get_config("vicuna-tiny"), dtype="float32",
+        draft=DraftConfig(kind="hydra", n_heads=2, n_mlp_layers=1))
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    toks = jax.random.randint(rng, (2, 32), 0, cfg.vocab_size)
+
+    def loss_both(dp_, base_):
+        return head_train_loss(dp_, base_, cfg, toks)[0]
+
+    gd, gb = jax.grad(loss_both, argnums=(0, 1))(dp, params)
+    draft_norm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(gd))
+    base_norm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(gb))
+    assert draft_norm > 0
+    assert base_norm == 0.0
+
+
+def test_head_alignment_learnable_signal(rng):
+    """On a DETERMINISTIC sequence (token t = t mod V), head j must be able
+    to place probability on the right target: verify the loss target
+    indexing by checking a single gradient step reduces loss."""
+    cfg = dataclasses.replace(
+        get_config("vicuna-tiny"), dtype="float32", n_layers=2,
+        draft=DraftConfig(kind="hydra", n_heads=2, n_mlp_layers=1))
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    toks = jnp.tile(jnp.arange(32)[None, :], (4, 1)) % cfg.vocab_size
+    tc = TrainConfig(peak_lr=3e-3, warmup=1, total_steps=50)
+    step = make_head_train_step(cfg, tc)
+    opt = init_adamw(dp)
+    l0 = None
+    for i in range(50):
+        dp, opt, m = step(dp, params, opt, toks, jax.random.fold_in(rng, i))
+        if l0 is None:
+            l0 = float(m["loss"])
+    assert float(m["loss"]) < l0, "head training did not reduce loss"
+
+
+def test_distill_objective_runs(rng):
+    cfg = dataclasses.replace(
+        get_config("vicuna-tiny"), dtype="float32",
+        draft=DraftConfig(kind="hydra", n_heads=2, n_mlp_layers=1))
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    toks = jax.random.randint(rng, (2, 32), 0, cfg.vocab_size)
+    loss, metrics = head_train_loss(dp, params, cfg, toks,
+                                    objective="distill")
+    assert bool(jnp.isfinite(loss))
+    loss_n, _ = head_train_loss(dp, params, cfg, toks, objective="data",
+                                noise_alpha=5.0, rng=rng)
+    assert bool(jnp.isfinite(loss_n))
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+    params = init_params(rng, cfg)
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, params)
+    like = jax.tree.map(jnp.zeros_like, params)
+    restored = load_checkpoint(path, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_synthetic_data_statistics():
+    spec = MarkovSpec(vocab_size=512, branch=4, peak=0.7, seed=0)
+    data = sample_corpus(spec, 64, 256, seed=3)
+    assert data.shape == (64, 256)
+    assert data.min() >= 0 and data.max() < 512
+    # determinism
+    data2 = sample_corpus(spec, 64, 256, seed=3)
+    np.testing.assert_array_equal(data, data2)
+    # pipeline shards
+    pipe = DataPipeline(spec, seq_len=64, batch_size=8, n_train=32, n_eval=8)
+    batches = list(pipe.train_batches(3))
+    assert len(batches) == 3 and batches[0].shape == (8, 64)

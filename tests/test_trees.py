@@ -1,0 +1,72 @@
+"""TreeSpec invariants — unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trees import (TreeSpec, chain_tree, default_tree,
+                              tree_from_rank_paths)
+
+
+@st.composite
+def tree_specs(draw):
+    n = draw(st.integers(2, 24))
+    parents = [-1]
+    for i in range(1, n):
+        parents.append(draw(st.integers(0, i - 1)))
+    return TreeSpec(tuple(parents))
+
+
+@given(tree_specs())
+@settings(max_examples=30, deadline=None)
+def test_ancestor_mask_properties(tree):
+    m = tree.ancestor_mask
+    T = tree.size
+    assert m.shape == (T, T)
+    assert np.all(np.diag(m))                       # reflexive
+    assert np.all(m == (m & np.tril(np.ones((T, T), bool))))  # topological
+    # transitive: ancestor-of-ancestor is ancestor
+    for i in range(T):
+        for j in np.where(m[i])[0]:
+            assert np.all(m[i] >= m[j] * 1)
+
+
+@given(tree_specs())
+@settings(max_examples=30, deadline=None)
+def test_depth_and_ancestors_consistent(tree):
+    dep = tree.depth
+    anc = tree.ancestors
+    for i in range(tree.size):
+        path = tree.path_to(i)
+        assert len(path) == dep[i] + 1
+        assert path[-1] == i
+        for d, n in enumerate(path):
+            assert anc[i, d] == n
+
+
+@given(tree_specs())
+@settings(max_examples=30, deadline=None)
+def test_child_rank_unique_per_parent(tree):
+    rank = tree.child_rank
+    for p in range(tree.size):
+        kids = [i for i in range(1, tree.size) if tree.parents[i] == p]
+        assert sorted(rank[k] for k in kids) == list(range(len(kids)))
+
+
+def test_chain_tree():
+    t = chain_tree(4)
+    assert t.size == 5
+    assert list(t.depth) == [0, 1, 2, 3, 4]
+    assert np.array_equal(t.ancestor_mask, np.tril(np.ones((5, 5), bool)))
+
+
+def test_tree_from_rank_paths_shares_prefixes():
+    t = tree_from_rank_paths([(0,), (1,), (0, 0), (0, 1), (1, 0)])
+    assert t.size == 6  # root + 2 depth-1 + 3 depth-2
+    assert t.max_depth == 2
+
+
+def test_default_tree_sizes():
+    for size in (8, 16, 32):
+        t = default_tree(size, 4, 4)
+        assert t.size <= size
+        assert t.max_depth <= 4

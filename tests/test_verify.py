@@ -1,0 +1,121 @@
+"""Verification-criteria tests: greedy acceptance against brute-force
+sequential greedy; typical acceptance threshold behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trees import chain_tree, default_tree
+from repro.core.verify import greedy_verify, typical_verify
+
+
+def test_greedy_chain_matches_sequential():
+    """On a chain, greedy acceptance = longest prefix where each candidate
+    equals the argmax of the previous node's logits."""
+    tree = chain_tree(4)
+    B, T, V = 3, 5, 11
+    rng = np.random.RandomState(0)
+    logits = jnp.asarray(rng.randn(B, T, V).astype(np.float32))
+    am = np.asarray(jnp.argmax(logits, -1))
+    toks = np.zeros((B, T), np.int32)
+    toks[:, 0] = 1
+    # craft: row 0 all correct, row 1 breaks at step 2, row 2 breaks at 1
+    for b in range(B):
+        for i in range(1, T):
+            toks[b, i] = am[b, i - 1]
+    toks[1, 3] = (toks[1, 3] + 1) % V
+    toks[2, 1] = (toks[2, 1] + 1) % V
+    res = greedy_verify(tree, jnp.asarray(toks), logits)
+    assert list(np.asarray(res.n_accept)) == [4, 2, 0]
+    # bonus = argmax at last accepted node
+    assert int(res.bonus_token[2]) == am[2, 0]
+    assert int(res.bonus_token[0]) == am[0, 4]
+
+
+@given(st.integers(0, 10000))
+@settings(max_examples=20, deadline=None)
+def test_greedy_tree_vs_bruteforce(seed):
+    tree = default_tree(12, 3, 3)
+    T = tree.size
+    B, V = 2, 7
+    rng = np.random.RandomState(seed)
+    logits = rng.randn(B, T, V).astype(np.float32)
+    toks = rng.randint(0, V, (B, T)).astype(np.int32)
+    res = greedy_verify(tree, jnp.asarray(toks), jnp.asarray(logits))
+    am = logits.argmax(-1)
+    # brute force: evaluate every root-to-node path
+    for b in range(B):
+        best_depth = 0
+        for n in range(T):
+            path = tree.path_to(n)
+            ok = all(toks[b, path[i + 1]] == am[b, path[i]]
+                     for i in range(len(path) - 1))
+            if ok:
+                best_depth = max(best_depth, len(path) - 1)
+        assert int(res.n_accept[b]) == best_depth
+
+
+def test_typical_thresholds():
+    """Low-entropy base distribution + wrong token => reject; matching
+    token => accept; eps=1 (impossible threshold) => reject all."""
+    tree = chain_tree(2)
+    B, T, V = 1, 3, 8
+    logits = np.full((B, T, V), -10.0, np.float32)
+    logits[:, :, 3] = 10.0                       # near-deterministic on 3
+    toks = np.array([[0, 3, 3]], np.int32)
+    rng = jax.random.PRNGKey(0)
+    res = typical_verify(tree, jnp.asarray(toks), jnp.asarray(logits), rng,
+                         temperature=1.0, epsilon=0.1)
+    assert int(res.n_accept[0]) == 2
+    toks_bad = np.array([[0, 4, 3]], np.int32)
+    res2 = typical_verify(tree, jnp.asarray(toks_bad), jnp.asarray(logits),
+                          rng, temperature=1.0, epsilon=0.1)
+    assert int(res2.n_accept[0]) == 0
+
+
+def test_typical_entropy_gate():
+    """Uniform base distribution: entropy term alpha*exp(-H) << eps, so any
+    token with p=1/V > alpha*exp(-H) is accepted."""
+    tree = chain_tree(1)
+    B, T, V = 1, 2, 4
+    logits = np.zeros((B, T, V), np.float32)     # uniform, H = ln 4
+    toks = np.array([[0, 2]], np.int32)
+    res = typical_verify(tree, jnp.asarray(toks), jnp.asarray(logits),
+                         jax.random.PRNGKey(1), temperature=1.0,
+                         epsilon=0.9, alpha=0.9)
+    # p = 0.25; threshold = min(0.9, 0.9*exp(-ln4)) = 0.225 < 0.25 => accept
+    assert int(res.n_accept[0]) == 1
+
+
+def test_chain_rejection_distribution_preserving():
+    """Rejection resampling (Leviathan): with draft == base distribution,
+    acceptance probability is ~1; with disjoint supports, ~0."""
+    import jax
+    from repro.core.verify import chain_rejection_verify
+
+    B, K, V = 64, 3, 16
+    rng_np = np.random.RandomState(0)
+    base_logits = jnp.asarray(rng_np.randn(B, K + 1, V).astype(np.float32))
+    logp = jax.nn.log_softmax(base_logits, axis=-1)
+    # draft tokens sampled greedily from base + matching draft logp
+    toks = np.zeros((B, K + 1), np.int32)
+    dlp = np.zeros((B, K + 1), np.float32)
+    am = np.asarray(jnp.argmax(base_logits, -1))
+    for i in range(1, K + 1):
+        toks[:, i] = am[:, i - 1]
+        dlp[:, i] = np.asarray(jnp.take_along_axis(
+            logp[:, i - 1], jnp.asarray(toks[:, i])[:, None], 1))[:, 0]
+    res = chain_rejection_verify(jnp.asarray(toks), jnp.asarray(dlp),
+                                 base_logits, jax.random.PRNGKey(0))
+    # p_base(argmax)/p_draft(argmax) == 1 => always accepted
+    assert float(res.n_accept.mean()) == K
+    # draft claims prob ~1 on tokens the base gives ~0 => reject-heavy
+    bad = np.zeros((B, K + 1), np.int32)
+    bad_lp = np.zeros((B, K + 1), np.float32)   # draft prob 1.0
+    low = np.asarray(jnp.argmin(base_logits, -1))
+    for i in range(1, K + 1):
+        bad[:, i] = low[:, i - 1]
+    res2 = chain_rejection_verify(jnp.asarray(bad), jnp.asarray(bad_lp),
+                                  base_logits, jax.random.PRNGKey(1))
+    assert float(res2.n_accept.mean()) < 0.5
