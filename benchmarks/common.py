@@ -118,6 +118,41 @@ def timed_generate(params, dp, cfg, tree, prompts, *, max_new_tokens=48,
     return n_tokens / wall, float(jnp.mean(jnp.asarray(acc))), steps, toks
 
 
+def ragged_requests(n: int, *, seed: int = 0, min_len: int = 16,
+                    max_len: int = 32, max_new_tokens: int = 32):
+    """A ragged serving workload: n requests with mixed prompt lengths and
+    mixed budgets drawn deterministically from `seed` (so the continuous
+    and bucketed engines can be benchmarked on the identical stream)."""
+    from repro.serving.engine import Request
+    _, _, pipe = base_setup()
+    rs = np.random.RandomState(seed)
+    toks = np.asarray(pipe.eval_batch(n))
+    return [Request(
+        prompt=toks[i, :rs.randint(min_len, max_len + 1)].astype(np.int32),
+        max_new_tokens=int(rs.randint(max(max_new_tokens // 2, 2),
+                                      max_new_tokens + 1)))
+        for i in range(n)]
+
+
+def timed_serve(engine_cls, params, dp, cfg, tree, requests, *,
+                max_batch: int = 8, use_speculative: bool = True,
+                criterion: str = "greedy"):
+    """Serve `requests` through `engine_cls`; returns the EngineStats
+    (tokens/s, slot utilization, per-request latency percentiles)."""
+    eng = engine_cls(params, dp, cfg, tree, max_len=512,
+                     use_speculative=use_speculative, criterion=criterion)
+    return eng.serve(requests, max_batch=max_batch)
+
+
+def serve_derived(stats) -> str:
+    """The figure-3 derived-metric string for one engine run."""
+    return (f"tok_per_s={stats.tokens_per_s:.2f};"
+            f"tok_per_step={stats.tokens_per_step:.3f};"
+            f"slot_util={stats.slot_utilization:.3f};"
+            f"mean_lat_ms={stats.mean_latency_s * 1e3:.1f};"
+            f"p99_lat_ms={stats.p99_latency_s * 1e3:.1f}")
+
+
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row, flush=True)

@@ -1,5 +1,6 @@
-"""Batched speculative serving (paper §6.2): run the SpeculativeEngine over
-a request stream at several batch sizes, Hydra vs Medusa vs autoregressive.
+"""Batched speculative serving (paper §6.2): run the continuous-batching
+engine over a ragged request stream, Hydra vs Medusa vs autoregressive,
+with the bucketed static scheduler as the baseline.
 
   PYTHONPATH=src python examples/serve_spec.py [--batch 4]
 Uses benchmark checkpoints (trains them on first run).
@@ -15,12 +16,14 @@ sys.path.insert(0, ".")  # for benchmarks.common when run from repo root
 
 from benchmarks.common import base_setup, draft_setup  # noqa: E402
 from repro.core.trees import default_tree  # noqa: E402
-from repro.serving.engine import Request, SpeculativeEngine  # noqa: E402
+from repro.serving.engine import (BucketedEngine, Request,  # noqa: E402
+                                  SpeculativeEngine)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="slot-pool size (max_batch)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=32)
     args = ap.parse_args()
@@ -30,21 +33,31 @@ def main() -> None:
     rng = np.random.RandomState(0)
 
     def make_requests():
-        return [Request(prompt=pipe.eval_batch(args.requests)[i, :32],
-                        max_new_tokens=args.max_new_tokens)
+        # ragged stream: mixed prompt lengths AND budgets
+        toks = pipe.eval_batch(args.requests)
+        return [Request(prompt=np.asarray(toks[i, :rng.randint(16, 33)]),
+                        max_new_tokens=rng.randint(
+                            args.max_new_tokens // 2, args.max_new_tokens + 1))
                 for i in range(args.requests)]
 
     for mode in ("autoregressive", "medusa", "hydra", "hydra++"):
         if mode == "autoregressive":
-            eng = SpeculativeEngine(params, None, cfg, tree, max_len=512,
-                                    use_speculative=False)
+            c2, dp, spec = cfg, None, False
         else:
             c2, dp = draft_setup(mode)
-            eng = SpeculativeEngine(params, dp, c2, tree, max_len=512)
-        stats = eng.serve(make_requests(), max_batch=args.batch)
-        print(f"{mode:16s} steps={stats.steps:4d} tokens={stats.tokens:5d} "
-              f"tok/step={stats.tokens_per_step:5.2f} "
-              f"tok/s={stats.tokens_per_s:7.1f}")
+            spec = True
+        for name, engine_cls in (("continuous", SpeculativeEngine),
+                                 ("bucketed", BucketedEngine)):
+            eng = engine_cls(params, dp, c2, tree, max_len=512,
+                             use_speculative=spec)
+            rng.seed(0)  # identical workload for every engine/mode pair
+            stats = eng.serve(make_requests(), max_batch=args.batch)
+            print(f"{mode:16s} {name:10s} steps={stats.steps:4d} "
+                  f"tokens={stats.tokens:5d} "
+                  f"tok/step={stats.tokens_per_step:5.2f} "
+                  f"tok/s={stats.tokens_per_s:7.1f} "
+                  f"util={stats.slot_utilization:.3f} "
+                  f"mean_lat={stats.mean_latency_s * 1e3:7.1f}ms")
 
 
 if __name__ == "__main__":

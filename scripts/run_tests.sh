@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 test loop: CPU-pinned, skipping the `slow` interpret-mode kernel
+# sweeps so the default run finishes in minutes.  Pass extra pytest args
+# through, e.g. `scripts/run_tests.sh tests/test_engine_continuous.py -x`.
+# The full (slow-inclusive) tier-1 command stays:
+#   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS=cpu
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m "not slow" "$@"

@@ -82,6 +82,84 @@ def init_decode_state(params, draft_params, cfg: ModelConfig, prompt,
                        prefix_k=pk, prefix_v=pv, rng=rng)
 
 
+def init_pool_state(params, draft_params, cfg: ModelConfig, max_batch: int,
+                    max_len: int, rng) -> DecodeState:
+    """Empty slot-pool state for a continuous-batching engine: all caches
+    zeroed, every row idle (cache_len 0).  Rows become live via
+    ``join_slot`` and are stepped with an ``active`` mask."""
+    pk = pv = None
+    if draft_params is not None and "prefix" in draft_params:
+        pc = init_prefix_cache(cfg, max_batch, max_len)
+        pk, pv = pc["k"], pc["v"]
+    return DecodeState(
+        cache=init_cache(cfg, max_batch, max_len),
+        cache_len=jnp.zeros((max_batch,), jnp.int32),
+        last_token=jnp.zeros((max_batch,), jnp.int32),
+        last_hidden=jnp.zeros((max_batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+        prefix_k=pk, prefix_v=pv, rng=rng)
+
+
+def join_slot(params, draft_params, cfg: ModelConfig, state: DecodeState,
+              prompt, real_len, slot, *, greedy: bool = True) -> DecodeState:
+    """Prefill one request and install it in row ``slot`` of the pool.
+
+    prompt: (P,) int32, right-padded to P; ``real_len`` <= P is the true
+    prompt length (length-masked attention: with right padding and causal
+    masking, positions < real_len never attend to the pad tail, and the
+    pad tail's cache entries sit beyond cache_len = real_len where every
+    later verify step masks or overwrites them).  P is the only shape this
+    function traces on, so an engine that buckets prompt lengths compiles
+    one join per bucket.  NOTE: architectures with recurrent state groups
+    (mamba/rwkv) must be called with real_len == P — a recurrent state
+    scanned over pad tokens is corrupted, there is nothing to mask.
+    """
+    P = prompt.shape[0]
+    pos = jnp.arange(P)[None, :]
+    row_cache = init_cache(cfg, 1, _pool_max_len(state))
+    out = forward(params, cfg, prompt[None, :], pos, mode="full",
+                  cache=row_cache, want_logits=False)
+    idx = jnp.maximum(real_len - 1, 0)
+    h_last = out.hidden[0, idx]
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"])
+    last_logits = h_last.astype(jnp.float32) @ unembed.astype(jnp.float32)
+    rng, sub = jax.random.split(state.rng)
+    if greedy:
+        tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    else:
+        tok0 = jax.random.categorical(sub, last_logits).astype(jnp.int32)
+
+    h = h_last
+    pk, pv = state.prefix_k, state.prefix_v
+    if draft_params is not None and "prefix" in draft_params:
+        ph, nk, nv = prefix_forward(draft_params, cfg, out.hidden, pos)
+        pk = pk.at[slot, :P].set(nk[0].astype(pk.dtype))
+        pv = pv.at[slot, :P].set(nv[0].astype(pv.dtype))
+        h = ph[0, idx]
+
+    new_cache = jax.tree_util.tree_map(
+        lambda pool, row: pool.at[:, slot].set(row[:, 0].astype(pool.dtype)),
+        state.cache, out.cache)
+    return DecodeState(
+        cache=new_cache,
+        cache_len=state.cache_len.at[slot].set(real_len),
+        last_token=state.last_token.at[slot].set(tok0),
+        last_hidden=state.last_hidden.at[slot].set(
+            h.astype(state.last_hidden.dtype)),
+        prefix_k=pk, prefix_v=pv, rng=rng)
+
+
+def _pool_max_len(state: DecodeState) -> int:
+    """Static cache capacity S of a pool state (attention caches are
+    (L, B, S, ...); state-group-only archs fall back to prefix/None)."""
+    for group in state.cache:
+        if "k" in group:
+            return group["k"].shape[2]
+    if state.prefix_k is not None:
+        return state.prefix_k.shape[1]
+    return 1  # pure-SSM cache pytrees carry no sequence axis
+
+
 # ---------------------------------------------------------------------------
 # the speculative step
 # ---------------------------------------------------------------------------
@@ -90,7 +168,13 @@ def init_decode_state(params, draft_params, cfg: ModelConfig, prompt,
 def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
                      state: DecodeState, *, criterion: str = "greedy",
                      temperature: float = 0.7, epsilon: float = 0.15,
-                     alpha: Optional[float] = None) -> StepResult:
+                     alpha: Optional[float] = None,
+                     active: Optional[jnp.ndarray] = None) -> StepResult:
+    """``active`` (B,) bool: rows that hold a live request.  Inactive rows
+    ride along in the batch (the forward still runs over them — shapes are
+    static) but emit PAD, advance no cache, and keep their state bit-frozen,
+    which is what lets a continuous-batching engine free and refill slots
+    without retracing.  ``active=None`` means all rows live (legacy path)."""
     B = state.last_token.shape[0]
     T = tree.size
     depth = jnp.asarray(tree.depth)
@@ -118,7 +202,7 @@ def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
 
     # 4. commit
     new_cache = commit_cache(out.cache, state.cache_len, res.path_nodes,
-                             res.n_accept)
+                             res.n_accept, active=active, prev=state.cache)
     D1 = res.path_nodes.shape[1]
     bidx = jnp.arange(B)[:, None]
     acc_hidden = out.hidden[bidx, res.path_nodes]          # (B, D1, d)
@@ -146,13 +230,28 @@ def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
     emitted = jnp.where(j == res.n_accept[:, None], res.bonus_token[:, None],
                         emitted)
 
+    n_emitted = res.n_accept + 1
+    cache_len = state.cache_len + n_emitted
+    last_token, last_hidden = res.bonus_token, h_next
+    if active is not None:
+        # freeze inactive rows: attention commits only touched their scratch
+        # region (beyond cache_len, masked out by every later step) and the
+        # state-group commit already kept `prev`, so pinning the per-row
+        # scalars/hidden is all that is left.
+        emitted = jnp.where(active[:, None], emitted, PAD_TOKEN)
+        n_emitted = jnp.where(active, n_emitted, 0)
+        cache_len = jnp.where(active, cache_len, state.cache_len)
+        last_token = jnp.where(active, last_token, state.last_token)
+        last_hidden = jnp.where(active[:, None], last_hidden,
+                                state.last_hidden)
+
     new_state = DecodeState(
         cache=new_cache,
-        cache_len=state.cache_len + res.n_accept + 1,
-        last_token=res.bonus_token,
-        last_hidden=h_next,
+        cache_len=cache_len,
+        last_token=last_token,
+        last_hidden=last_hidden,
         prefix_k=pk, prefix_v=pv, rng=rng)
-    return StepResult(new_state, emitted, res.n_accept + 1)
+    return StepResult(new_state, emitted, n_emitted)
 
 
 # ---------------------------------------------------------------------------
@@ -161,8 +260,8 @@ def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
 
 
 def autoregressive_step(params, cfg: ModelConfig, state: DecodeState, *,
-                        greedy: bool = True,
-                        temperature: float = 1.0) -> StepResult:
+                        greedy: bool = True, temperature: float = 1.0,
+                        active: Optional[jnp.ndarray] = None) -> StepResult:
     B = state.last_token.shape[0]
     tokens = state.last_token[:, None]
     positions = state.cache_len[:, None]
@@ -178,12 +277,24 @@ def autoregressive_step(params, cfg: ModelConfig, state: DecodeState, *,
                                      ).astype(jnp.int32)
     path = jnp.zeros((B, 1), jnp.int32)
     zero = jnp.zeros((B,), jnp.int32)
-    new_cache = commit_cache(out.cache, state.cache_len, path, zero)
+    new_cache = commit_cache(out.cache, state.cache_len, path, zero,
+                             active=active, prev=state.cache)
+    emitted = nxt[:, None]
+    n_emitted = jnp.ones((B,), jnp.int32)
+    cache_len = state.cache_len + 1
+    last_hidden = out.hidden[:, 0]
+    if active is not None:
+        emitted = jnp.where(active[:, None], emitted, PAD_TOKEN)
+        n_emitted = jnp.where(active, n_emitted, 0)
+        cache_len = jnp.where(active, cache_len, state.cache_len)
+        nxt = jnp.where(active, nxt, state.last_token)
+        last_hidden = jnp.where(active[:, None], last_hidden,
+                                state.last_hidden)
     new_state = DecodeState(
-        cache=new_cache, cache_len=state.cache_len + 1, last_token=nxt,
-        last_hidden=out.hidden[:, 0], prefix_k=state.prefix_k,
+        cache=new_cache, cache_len=cache_len, last_token=nxt,
+        last_hidden=last_hidden, prefix_k=state.prefix_k,
         prefix_v=state.prefix_v, rng=rng)
-    return StepResult(new_state, nxt[:, None], jnp.ones((B,), jnp.int32))
+    return StepResult(new_state, emitted, n_emitted)
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,21 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Version-compat shims shared by the Pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` around
+0.5.x; the installed toolchain may carry either name.  Kernels import
+``tpu_compiler_params`` from here instead of touching ``pltpu`` directly.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(*, dimension_semantics, **kwargs):
+    """Construct TPU compiler params under either pltpu API name."""
+    return _COMPILER_PARAMS_CLS(dimension_semantics=dimension_semantics,
+                                **kwargs)

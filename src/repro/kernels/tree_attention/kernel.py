@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -113,7 +115,7 @@ def tree_attention(q, cache_k, cache_v, tree_k, tree_v, tree_mask, cache_len,
         body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len, q, cache_k, cache_v, tree_k, tree_v, tree_mask)

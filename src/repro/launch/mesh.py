@@ -20,6 +20,20 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_abstract_mesh(shape, axes):
+    """Device-free mesh for sharding-rule tests.
+
+    jax changed ``AbstractMesh``'s signature from ``(shape, axis_names)`` to a
+    single ``((name, size), ...)`` tuple around 0.4.36 — accept the old-style
+    arguments and construct whichever form the installed jax expects.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(shape, axes)
+
+
 # TPU v5e hardware constants for the roofline model (per chip)
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

@@ -18,15 +18,22 @@ from repro.core.heads import init_draft_params
 from repro.core.trees import chain_tree, default_tree
 from repro.launch.specs import tree_for
 from repro.models.model import init_params
-from repro.serving.engine import Request, SpeculativeEngine
+from repro.serving.engine import BucketedEngine, Request, SpeculativeEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="slot-pool size (max_batch)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths in [prompt-len/2, prompt-len]")
     ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--engine", choices=("continuous", "bucketed"),
+                    default="continuous")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
 
@@ -45,16 +52,25 @@ def main() -> None:
     print(f"[serve] arch={cfg.name} tree={tree.size} "
           f"(chain={tree.max_depth + 1 == tree.size})")
 
-    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=512)
+    engine_cls = (SpeculativeEngine if args.engine == "continuous"
+                  else BucketedEngine)
+    eng = engine_cls(params, dp, cfg, tree, max_len=512)
     rs = np.random.RandomState(0)
-    reqs = [Request(prompt=rs.randint(0, cfg.vocab_size,
-                                      args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new_tokens)
-            for _ in range(args.batch)]
+    n_requests = args.requests or args.batch
+    reqs = []
+    for _ in range(n_requests):
+        plen = (rs.randint(max(args.prompt_len // 2, 1), args.prompt_len + 1)
+                if args.ragged else args.prompt_len)
+        reqs.append(Request(
+            prompt=rs.randint(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=args.max_new_tokens))
     stats = eng.serve(reqs, max_batch=args.batch)
-    print(f"[serve] steps={stats.steps} tokens={stats.tokens} "
-          f"tok/step={stats.tokens_per_step:.2f} "
-          f"tok/s={stats.tokens_per_s:.1f}")
+    print(f"[serve] engine={args.engine} steps={stats.steps} "
+          f"tokens={stats.tokens} tok/step={stats.tokens_per_step:.2f} "
+          f"tok/s={stats.tokens_per_s:.1f} "
+          f"util={stats.slot_utilization:.3f} "
+          f"mean_lat={stats.mean_latency_s * 1e3:.1f}ms "
+          f"p99_lat={stats.p99_latency_s * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

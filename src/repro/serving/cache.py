@@ -41,20 +41,35 @@ def _commit_state(arr, last_node):
     return arr[:, bidx, jnp.minimum(last_node, T - 1)]     # (L,B,...)
 
 
-def commit_cache(candidates, cache_len, path_nodes, n_accept):
+def commit_cache(candidates, cache_len, path_nodes, n_accept, *,
+                 active=None, prev=None):
     """candidates: cache pytree from a verify forward. Returns the committed
-    cache (same structure as the pre-verify committed cache)."""
+    cache (same structure as the pre-verify committed cache).
+
+    ``active`` (B,) bool + ``prev`` (pre-verify committed cache) support
+    continuous batching: rows with ``active=False`` must come out of the
+    commit untouched.  Attention groups already do — their compaction only
+    writes the scratch region [len, len+D1), which is beyond the frozen
+    ``cache_len`` — but state groups REPLACE the committed recurrent state
+    with a candidate, so inactive rows are restored from ``prev``."""
     last_node = jnp.take_along_axis(path_nodes, n_accept[:, None],
                                     axis=1)[:, 0]          # (B,)
     out = []
-    for group in candidates:
+    for gi, group in enumerate(candidates):
         g = {}
         for key, arr in group.items():
             if key in ATTN_KEYS:
                 g[key] = _commit_attn(arr, cache_len, path_nodes,
                                       has_layer_axis=True)
             else:
-                g[key] = _commit_state(arr, last_node)
+                new = _commit_state(arr, last_node)
+                if active is not None:
+                    assert prev is not None, \
+                        "active-masked commit of a state group needs prev"
+                    old = prev[gi][key]
+                    sel = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+                    new = jnp.where(sel, new, old.astype(new.dtype))
+                g[key] = new
         out.append(g)
     return out
 

@@ -1,14 +1,29 @@
-"""Batched speculative-serving engine (paper §6.2: batched inference).
+"""Speculative serving engines (paper §6.2: batched inference).
 
-Requests are bucketed by prompt length (static-shape jit steps; one compiled
-step per (batch, prompt-len, tree) signature). Each batch runs prefill then
-speculative (or autoregressive baseline) steps until every row reaches its
-token budget or emits EOS. Throughput/acceptance statistics are collected
-per batch — these feed benchmarks for paper Figs. 2 and 3.
+Two schedulers over the same jitted decode step:
+
+``SpeculativeEngine`` — continuous batching.  A fixed pool of ``max_batch``
+slots and a FIFO request queue.  A request joins the pool the moment a slot
+is free (per-slot prefill via ``join_slot``: variable prompt lengths are
+right-padded to a bucket and length-masked), decodes with its own per-slot
+``cache_len``/budget/EOS, and its slot is freed and refilled the moment it
+finishes.  Finished rows are masked out of the step with ``active`` (the
+static-shape forward still spans them, but they emit PAD, advance no cache,
+and are excluded from throughput/acceptance statistics) — the FLOP win
+comes from refilling freed slots with queued work instead of draining.
+The jitted step signature depends only on ``(max_batch, tree)`` — never on
+queue occupancy — so the engine compiles exactly one step (plus one prefill
+per prompt-length bucket).
+
+``BucketedEngine`` — the legacy static scheduler kept as the baseline:
+requests are grouped by exact prompt length, each batch runs to completion,
+and a batch's slowest row drains while the others idle.  Benchmarks (paper
+Figs. 2/3) report both so the slot-utilization win is measurable.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -18,6 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.speculative import (autoregressive_step, init_decode_state,
+                                    init_pool_state, join_slot,
                                     spec_decode_step)
 
 
@@ -28,6 +44,17 @@ class Request:
     eos_token: Optional[int] = None
     output: List[int] = field(default_factory=list)
     done: bool = False
+    # serving timeline (wall-clock seconds, filled in by the engine)
+    t_enqueue: Optional[float] = None
+    t_join: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Queue-to-finish latency (None until the request completes)."""
+        if self.t_done is None or self.t_enqueue is None:
+            return None
+        return self.t_done - self.t_enqueue
 
 
 @dataclass
@@ -36,6 +63,11 @@ class EngineStats:
     tokens: int = 0
     wall_s: float = 0.0
     accept_lengths: List[float] = field(default_factory=list)
+    # slot-occupancy accounting: capacity counts max_batch slots per step,
+    # active counts the rows that held a live (not-yet-finished) request.
+    active_slot_steps: int = 0
+    capacity_slot_steps: int = 0
+    request_latency_s: List[float] = field(default_factory=list)
 
     @property
     def tokens_per_step(self) -> float:
@@ -45,8 +77,24 @@ class EngineStats:
     def tokens_per_s(self) -> float:
         return self.tokens / max(self.wall_s, 1e-9)
 
+    @property
+    def slot_utilization(self) -> float:
+        return self.active_slot_steps / max(self.capacity_slot_steps, 1)
 
-class SpeculativeEngine:
+    @property
+    def mean_latency_s(self) -> float:
+        lat = self.request_latency_s
+        return float(np.mean(lat)) if lat else 0.0
+
+    @property
+    def p99_latency_s(self) -> float:
+        lat = self.request_latency_s
+        return float(np.percentile(lat, 99)) if lat else 0.0
+
+
+class _EngineBase:
+    """Shared jitted-step plumbing for both schedulers."""
+
     def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
                  max_len: int = 2048, criterion: str = "greedy",
                  use_speculative: bool = True, temperature: float = 0.7,
@@ -58,16 +106,157 @@ class SpeculativeEngine:
         self.max_len = max_len
         self.criterion = criterion
         self.use_speculative = use_speculative
+        self.temperature = temperature
         self.rng = jax.random.PRNGKey(seed)
         if use_speculative:
-            self._step = jax.jit(lambda p, dp, st: spec_decode_step(
+            self._step = jax.jit(lambda p, dp, st, act: spec_decode_step(
                 p, dp, cfg, tree, st, criterion=criterion,
-                temperature=temperature, epsilon=epsilon))
+                temperature=temperature, epsilon=epsilon, active=act))
         else:
-            self._step = jax.jit(lambda p, st: autoregressive_step(
+            self._step = jax.jit(lambda p, _dp, st, act: autoregressive_step(
                 p, cfg, st, greedy=(criterion == "greedy"),
-                temperature=temperature))
+                temperature=temperature, active=act))
         self.stats = EngineStats()
+
+    def _run_step(self, state, active=None):
+        return self._step(self.params, self.draft_params, state, active)
+
+
+class SpeculativeEngine(_EngineBase):
+    """Continuous-batching speculative engine (the default serving path).
+
+    ``prefill_bucket`` rounds prompt lengths up before the per-slot prefill
+    so the number of compiled join functions is bounded (one per bucket).
+    Architectures with recurrent state groups (mamba/rwkv) force exact-length
+    prefill — a recurrent state scanned over right-pad tokens would be
+    corrupted (see ``join_slot``).
+    """
+
+    def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
+                 prefill_bucket: int = 32, **kw):
+        super().__init__(params, draft_params, cfg, tree, **kw)
+        self.prefill_bucket = (1 if cfg.block_kind in ("mamba2", "rwkv6")
+                               else max(int(prefill_bucket), 1))
+        greedy = self.criterion == "greedy"
+        # jit retraces per padded prompt shape, i.e. one compile per bucket
+        self._join_fn = jax.jit(
+            lambda p, dp, st, prompt, rl, slot: join_slot(
+                p, dp, cfg, st, prompt, rl, slot, greedy=greedy))
+
+    # -- prefill-on-join -----------------------------------------------------
+
+    def _pad_len(self, n: int) -> int:
+        b = self.prefill_bucket
+        return max(-(-n // b) * b, b)
+
+    def _check_capacity(self, r: Request) -> None:
+        scratch = self.tree.size if self.use_speculative else 1
+        need = self._pad_len(len(r.prompt)) + r.max_new_tokens + scratch
+        if need > self.max_len:
+            raise ValueError(
+                f"request needs {need} cache slots (padded prompt "
+                f"{self._pad_len(len(r.prompt))} + budget {r.max_new_tokens} "
+                f"+ {scratch} verify scratch) but max_len={self.max_len}")
+
+    def _join(self, state, slot: int, r: Request):
+        n = len(r.prompt)
+        P = self._pad_len(n)
+        padded = np.zeros(P, np.int32)
+        padded[:n] = np.asarray(r.prompt, np.int32)
+        return self._join_fn(self.params, self.draft_params, state,
+                             jnp.asarray(padded), jnp.int32(n),
+                             jnp.int32(slot))
+
+    # -- serving -------------------------------------------------------------
+
+    def serve(self, requests: List[Request], *, max_batch: int = 8,
+              warmup: bool = True) -> EngineStats:
+        for r in requests:
+            self._check_capacity(r)
+        pending = deque(requests)
+        slots: List[Optional[Request]] = [None] * max_batch
+        active = np.zeros(max_batch, bool)
+
+        self.rng, sub = jax.random.split(self.rng)
+        state = init_pool_state(self.params, self.draft_params, self.cfg,
+                                max_batch, self.max_len, sub)
+
+        if warmup:  # compile the step + every join bucket outside the clock
+            jax.block_until_ready(self._run_step(
+                state, jnp.asarray(active)).state.cache_len)
+            for P in sorted({self._pad_len(len(r.prompt))
+                             for r in requests}):
+                jax.block_until_ready(self._join_fn(
+                    self.params, self.draft_params, state,
+                    jnp.zeros(P, jnp.int32), jnp.int32(1), jnp.int32(0)
+                ).cache_len)
+
+        # enqueue AFTER warmup so latency measures serving, not XLA compiles
+        now = time.time()
+        for r in requests:
+            r.t_enqueue = now
+
+        t0 = time.time()
+        while pending or active.any():
+            # refill every free slot before the next step
+            for si in range(max_batch):
+                if active[si] or not pending:
+                    continue
+                r = pending.popleft()
+                state = self._join(state, si, r)
+                r.t_join = time.time()
+                tok0 = int(state.last_token[si])
+                r.output.append(tok0)
+                if (len(r.output) >= r.max_new_tokens or
+                        (r.eos_token is not None and tok0 == r.eos_token)):
+                    self._finish(r)            # degenerate budget/EOS at t=0
+                    continue
+                slots[si] = r
+                active[si] = True
+            if not active.any():
+                continue
+
+            res = self._run_step(state, jnp.asarray(active))
+            state = res.state
+            jax.block_until_ready(state.cache_len)
+            emitted = np.asarray(res.emitted)
+            n_em = np.asarray(res.n_emitted)
+
+            live = active.copy()
+            for si in np.where(live)[0]:
+                r = slots[si]
+                appended = 0
+                for t in emitted[si][:n_em[si]]:
+                    # clamp at the budget: tokens past max_new_tokens are
+                    # dropped even when accepted mid-step
+                    if len(r.output) >= r.max_new_tokens:
+                        break
+                    r.output.append(int(t))
+                    appended += 1
+                    if r.eos_token is not None and t == r.eos_token:
+                        r.done = True
+                        break
+                self.stats.tokens += appended
+                if r.done or len(r.output) >= r.max_new_tokens:
+                    self._finish(r)
+                    slots[si] = None
+                    active[si] = False
+            self.stats.steps += 1
+            self.stats.accept_lengths.append(float(n_em[live].mean()))
+            self.stats.active_slot_steps += int(live.sum())
+            self.stats.capacity_slot_steps += max_batch
+        self.stats.wall_s += time.time() - t0
+        return self.stats
+
+    def _finish(self, r: Request) -> None:
+        r.done = True
+        r.t_done = time.time()
+        self.stats.request_latency_s.append(r.latency_s)
+
+
+class BucketedEngine(_EngineBase):
+    """Legacy static scheduler: exact-prompt-length buckets, run to
+    completion.  Kept as the measured baseline for the continuous engine."""
 
     # -- batching ------------------------------------------------------------
 
@@ -84,12 +273,37 @@ class SpeculativeEngine:
 
     def serve(self, requests: List[Request], *, max_batch: int = 8,
               warmup: bool = True) -> EngineStats:
-        for batch in self.bucket(requests, max_batch):
-            self._serve_batch(batch, warmup=warmup)
+        scratch = self.tree.size if self.use_speculative else 1
+        batches = list(self.bucket(requests, max_batch))
+        for batch in batches:
+            # a finished row keeps stepping until its whole batch drains, so
+            # capacity must cover the LARGEST budget in the batch per row
+            need = (len(batch[0].prompt)
+                    + max(r.max_new_tokens for r in batch) + scratch)
+            if need > self.max_len:
+                raise ValueError(
+                    f"batch needs {need} cache slots but "
+                    f"max_len={self.max_len}")
+        if warmup:  # precompile prefill+step per batch signature
+            for batch in batches:
+                B, P = len(batch), len(batch[0].prompt)
+                st = init_decode_state(
+                    self.params,
+                    self.draft_params if self.use_speculative else None,
+                    self.cfg, jnp.zeros((B, P), jnp.int32), self.max_len,
+                    jax.random.PRNGKey(0),
+                    greedy=(self.criterion == "greedy"))
+                jax.block_until_ready(self._run_step(st).state.cache_len)
+        # enqueue AFTER warmup so latency measures serving, not XLA compiles
+        now = time.time()
+        for r in requests:
+            r.t_enqueue = now
+        for batch in batches:
+            self._serve_batch(batch, max_batch, warmup=False)
         return self.stats
 
-    def _serve_batch(self, batch: List[Request], warmup: bool) -> None:
-        B = len(batch)
+    def _serve_batch(self, batch: List[Request], max_batch: int,
+                     warmup: bool) -> None:
         prompts = jnp.asarray(np.stack([r.prompt for r in batch]))
         self.rng, sub = jax.random.split(self.rng)
         state = init_decode_state(
@@ -97,39 +311,52 @@ class SpeculativeEngine:
             self.cfg, prompts, self.max_len, sub,
             greedy=(self.criterion == "greedy"))
         for r, t in zip(batch, np.asarray(state.last_token)):
+            r.t_join = time.time()
             r.output.append(int(t))
+            if (len(r.output) >= r.max_new_tokens or
+                    (r.eos_token is not None and int(t) == r.eos_token)):
+                self._finish(r)
 
         budget = max(r.max_new_tokens for r in batch)
 
-        def run(st):
-            if self.use_speculative:
-                return self._step(self.params, self.draft_params, st)
-            return self._step(self.params, st)
-
         if warmup:  # compile outside the timed region
-            jax.block_until_ready(run(state).state.cache_len)
+            jax.block_until_ready(self._run_step(state).state.cache_len)
 
         produced = 1
         t0 = time.time()
-        while produced < budget:
-            res = run(state)
+        while produced < budget and not all(r.done for r in batch):
+            res = self._run_step(state)
             state = res.state
             jax.block_until_ready(state.cache_len)
             emitted = np.asarray(res.emitted)
             n_em = np.asarray(res.n_emitted)
+            live = np.array([not r.done for r in batch])
             for bi, r in enumerate(batch):
                 if r.done:
-                    continue
+                    continue  # finished rows keep stepping but emit nothing
+                appended = 0
                 for t in emitted[bi][:n_em[bi]]:
+                    if len(r.output) >= r.max_new_tokens:
+                        break  # clamp the output at the request budget
                     r.output.append(int(t))
+                    appended += 1
                     if r.eos_token is not None and t == r.eos_token:
                         r.done = True
-                if len(r.output) >= r.max_new_tokens:
-                    r.done = True
+                        break
+                self.stats.tokens += appended
+                if r.done or len(r.output) >= r.max_new_tokens:
+                    self._finish(r)
             self.stats.steps += 1
-            self.stats.tokens += int(n_em.sum())
-            self.stats.accept_lengths.append(float(n_em.mean()))
-            produced += int(n_em.min())
-            if all(r.done for r in batch):
-                break
+            if live.any():  # acceptance/occupancy over live rows only
+                self.stats.accept_lengths.append(float(n_em[live].mean()))
+            self.stats.active_slot_steps += int(live.sum())
+            self.stats.capacity_slot_steps += max_batch
+            produced += int(n_em.min()) if n_em.size else 1
         self.stats.wall_s += time.time() - t0
+
+    def _finish(self, r: Request) -> None:
+        if r.t_done is not None:
+            return
+        r.done = True
+        r.t_done = time.time()
+        self.stats.request_latency_s.append(r.latency_s)

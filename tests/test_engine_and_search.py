@@ -12,7 +12,8 @@ from repro.core.tree_search import (expected_accept_length, grow_trees,
 from repro.core.trees import default_tree
 from repro.core.heads import init_draft_params
 from repro.models.model import init_params
-from repro.serving.engine import Request, SpeculativeEngine
+from repro.serving.engine import (BucketedEngine, Request,
+                                  SpeculativeEngine)
 
 
 @pytest.fixture(scope="module")
@@ -41,7 +42,7 @@ def test_engine_bucketing():
     rng = np.random.RandomState(0)
     reqs = [Request(prompt=np.zeros(l, np.int32)) for l in
             (8, 8, 8, 16, 16, 24)]
-    buckets = list(SpeculativeEngine.bucket(reqs, max_batch=2))
+    buckets = list(BucketedEngine.bucket(reqs, max_batch=2))
     sizes = sorted(len(b) for b in buckets)
     assert sizes == [1, 1, 2, 2]  # 8s -> 2+1, 16s -> 2, 24 -> 1
 

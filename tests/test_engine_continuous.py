@@ -1,0 +1,257 @@
+"""Continuous-batching engine tests.
+
+Load-bearing invariant: under greedy decoding, a ragged workload (mixed
+prompt lengths AND budgets) served through the slot pool must produce
+byte-identical outputs to serial ``generate()`` per request — slot joins,
+padded prefill, and the ``active`` mask must be invisible to the sampled
+token stream.  On top of that the pool must beat the bucketed baseline on
+slot utilization for the same workload, and EOS/budget edges must clamp
+exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.heads import init_draft_params
+from repro.core.speculative import PAD_TOKEN, generate
+from repro.core.trees import default_tree
+from repro.models.model import init_params
+from repro.serving.engine import BucketedEngine, Request, SpeculativeEngine
+
+LENS = (16, 23, 32, 9, 40, 16, 27, 12)      # ragged, mostly bucket-unaligned
+BUDGETS = (12, 14, 8, 10, 13, 9, 11, 14)
+MAX_LEN = 192
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = jax.random.PRNGKey(0)
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = default_tree(8, 2, 3)
+    return cfg, params, dp, tree
+
+
+def _serial_ref(params, dp, cfg, tree, prompt, budget):
+    """Serial greedy reference for one request: (prompt, budget, the
+    budget-clamped token list, per-step segments).  ``generate``'s
+    concatenated output is [first_token, D1-wide step segments...] with
+    PADs only padding segment tails, so splitting at D1 strides recovers
+    what each speculative step emitted (the segment's last token is the
+    step's bonus token)."""
+    toks, steps, _ = generate(params, dp, cfg, tree,
+                              jnp.asarray(prompt)[None, :],
+                              max_new_tokens=budget, max_len=MAX_LEN)
+    row = np.asarray(toks[0])
+    D1 = tree.max_depth + 1
+    segments = [row[:1]] + [row[1 + i * D1:1 + (i + 1) * D1]
+                            for i in range(steps)]
+    segments = [s[s != PAD_TOKEN] for s in segments]
+    flat = np.concatenate(segments)
+    return prompt, budget, [int(t) for t in flat[:budget]], segments
+
+
+@pytest.fixture(scope="module")
+def serial_refs(setup):
+    cfg, params, dp, tree = setup
+    rs = np.random.RandomState(0)
+    return [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, n).astype(np.int32),
+                        budget)
+            for n, budget in zip(LENS, BUDGETS)]
+
+
+def _requests(serial_refs, **overrides):
+    return [Request(prompt=p.copy(), max_new_tokens=b, **overrides)
+            for p, b, _, _ in serial_refs]
+
+
+def test_ragged_workload_matches_serial_generate(setup, serial_refs):
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    reqs = _requests(serial_refs)
+    stats = eng.serve(reqs, max_batch=4)
+    for r, (_, budget, ref, _) in zip(reqs, serial_refs):
+        assert r.output == ref, "continuous engine diverged from serial"
+        assert len(r.output) == budget          # clamped exactly at budget
+        assert r.done and r.latency_s is not None and r.latency_s >= 0
+    assert stats.steps > 0
+    assert stats.tokens == sum(len(r.output) - 1 for r in reqs), \
+        "stats must count exactly the post-prefill tokens delivered"
+    assert len(stats.request_latency_s) == len(reqs)
+
+
+def test_higher_slot_utilization_than_bucketed(setup, serial_refs):
+    cfg, params, dp, tree = setup
+    cont = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    cs = cont.serve(_requests(serial_refs), max_batch=4)
+    buck = BucketedEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    bs = buck.serve(_requests(serial_refs), max_batch=4)
+    assert 0.0 < cs.slot_utilization <= 1.0
+    assert cs.slot_utilization > bs.slot_utilization, \
+        (cs.slot_utilization, bs.slot_utilization)
+    # same tokens delivered either way (both serve the full workload)
+    assert cs.tokens == bs.tokens
+
+
+def test_step_signature_independent_of_occupancy(setup, serial_refs):
+    """One compiled step per (max_batch, tree): serving 1, 5, then 8
+    requests through the same engine must not add step compilations."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    for n in (1, 5, 8):
+        eng.serve(_requests(serial_refs)[:n], max_batch=4)
+    n_step_compiles = eng._step._cache_size()
+    assert n_step_compiles == 1, n_step_compiles
+
+
+def test_batch_of_one(setup, serial_refs):
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    reqs = _requests(serial_refs)[:3]
+    stats = eng.serve(reqs, max_batch=1)
+    for r, (_, budget, ref, _) in zip(reqs, serial_refs):
+        assert r.output == ref
+    assert stats.slot_utilization == 1.0   # a 1-slot pool is always full
+
+
+# ---------------------------------------------------------------------------
+# EOS / budget edge cases (also exercised for the bucketed baseline)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine_cls", [SpeculativeEngine, BucketedEngine])
+def test_eos_on_bonus_token(setup, serial_refs, engine_cls):
+    """A request whose EOS arrives as the BONUS token (the last emission of
+    a step) must stop exactly there, with the EOS kept in the output."""
+    cfg, params, dp, tree = setup
+    prompt, budget, ref, segments = serial_refs[0]
+    # find a step segment and use its final token (the bonus) as EOS
+    eos, cut = None, None
+    seen = len(segments[0])
+    for seg in segments[1:]:         # segments[0] is the prefill token
+        seen += len(seg)
+        if len(seg) == 0 or seen >= budget:
+            continue
+        bonus = int(seg[-1])         # last emission of the step = bonus
+        if bonus not in ref[:seen - 1]:
+            eos, cut = bonus, seen
+            break
+    assert eos is not None, "reference run produced no usable bonus token"
+    r = Request(prompt=prompt.copy(), max_new_tokens=budget, eos_token=eos)
+    engine_cls(params, dp, cfg, tree, max_len=MAX_LEN).serve(
+        [r], max_batch=1)
+    assert r.done
+    assert r.output == ref[:cut]
+    assert r.output[-1] == eos
+
+
+@pytest.fixture(scope="module")
+def setup_smallvocab():
+    """Tiny-vocab variant: with |V| = 8, a random-init draft head's argmax
+    collides with the base argmax often enough that greedy acceptance
+    actually happens (a random 2048-vocab model accepts ~never, which would
+    leave the mid-acceptance budget edge untestable)."""
+    rng = jax.random.PRNGKey(3)
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32",
+                              vocab_size=8)
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = default_tree(8, 2, 3)
+    rs = np.random.RandomState(1)
+    refs = [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, n).astype(np.int32),
+                        budget)
+            for n, budget in ((16, 20), (11, 20), (24, 20), (32, 20))]
+    return cfg, params, dp, tree, refs
+
+
+@pytest.mark.parametrize("engine_cls", [SpeculativeEngine, BucketedEngine])
+def test_budget_reached_mid_acceptance(setup_smallvocab, engine_cls):
+    """A budget landing strictly inside a step's accepted run must clamp the
+    output mid-step (no overshoot past max_new_tokens)."""
+    cfg, params, dp, tree, refs = setup_smallvocab
+    prompt = ref = cut = None
+    for prompt_i, budget_i, ref_i, segments_i in refs:
+        seen = len(segments_i[0])
+        for seg in segments_i[1:]:
+            if len(seg) >= 2 and seen + 1 < budget_i:
+                prompt, ref = prompt_i, ref_i
+                cut = seen + 1       # one token INTO this multi-token step
+                break
+            seen += len(seg)
+        if cut is not None:
+            break
+    assert cut is not None, \
+        "small-vocab reference never accepted >=2 tokens in one step"
+    r = Request(prompt=prompt.copy(), max_new_tokens=cut)
+    stats = engine_cls(params, dp, cfg, tree, max_len=MAX_LEN).serve(
+        [r], max_batch=1)
+    assert len(r.output) == cut
+    assert r.output == ref[:cut]
+    assert stats.tokens == cut - 1   # prefill token is not a served token
+
+
+def test_request_exceeding_cache_capacity_rejected(setup):
+    """A request whose padded prompt + budget + verify scratch cannot fit
+    in max_len must be rejected up front, not silently wrap the cache."""
+    cfg, params, dp, tree = setup
+    rs = np.random.RandomState(2)
+    big = Request(prompt=rs.randint(0, cfg.vocab_size, 48).astype(np.int32),
+                  max_new_tokens=64)
+    for engine_cls in (SpeculativeEngine, BucketedEngine):
+        eng = engine_cls(params, dp, cfg, tree, max_len=96)
+        with pytest.raises(ValueError, match="cache slots"):
+            eng.serve([big], max_batch=1)
+
+
+def test_recurrent_arch_matches_serial_generate():
+    """rwkv6: the active-masked state-group restore (commit_cache prev=)
+    and exact-length prefill (prefill_bucket forced to 1) must keep pooled
+    outputs byte-identical to serial generate()."""
+    from repro.launch.specs import tree_for
+    cfg = dataclasses.replace(get_config("rwkv6-1.6b").reduced(),
+                              dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = tree_for(cfg)                      # chain speculation for SSMs
+    rs = np.random.RandomState(0)
+    lens, buds = (12, 19, 25), (8, 10, 6)
+    refs = [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, n).astype(np.int32),
+                        b)
+            for n, b in zip(lens, buds)]
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    assert eng.prefill_bucket == 1            # recurrent => exact-length
+    reqs = _requests(refs)
+    eng.serve(reqs, max_batch=2)
+    for r, (_, _, ref, _) in zip(reqs, refs):
+        assert r.output == ref
+
+
+def test_eos_and_budget_in_same_pool(setup, serial_refs):
+    """Mixed EOS/budget termination inside one pool: outputs stay clamped
+    and slots are recycled (active occupancy never exceeds capacity)."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    reqs = _requests(serial_refs)
+    # give half the requests an EOS they'll never see (vocab-sized guard) and
+    # half an early one drawn from their own reference stream
+    for i, (r, (_, _, ref, _)) in enumerate(zip(reqs, serial_refs)):
+        r.eos_token = ref[len(ref) // 2] if i % 2 else cfg.vocab_size + 1
+    stats = eng.serve(reqs, max_batch=3)
+    for r, (_, budget, ref, _) in zip(reqs, serial_refs):
+        assert r.done
+        assert len(r.output) <= budget
+        if r.eos_token is not None and r.eos_token in ref:
+            first = ref.index(r.eos_token)
+            assert r.output == ref[:first + 1]
+        else:
+            assert r.output == ref
+    assert stats.active_slot_steps <= stats.capacity_slot_steps

@@ -30,6 +30,7 @@ TOL = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,Hq,Hkv,S,D", [
     (1, 2, 2, 128, 64), (2, 4, 2, 256, 64), (1, 8, 1, 256, 128),
     (2, 4, 4, 512, 32),
@@ -78,6 +79,7 @@ def _tree_mask(T, seed=0):
     return jnp.asarray(tm)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,Hq,Hkv,S,T,D", [
     (1, 2, 1, 256, 8, 64), (2, 4, 2, 512, 16, 64), (1, 4, 4, 512, 32, 128),
 ])
@@ -121,6 +123,7 @@ def test_tree_attention_padding_wrapper(rng):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,H,S,dk,dv,chunk", [
     (1, 2, 128, 32, 32, 32), (2, 3, 256, 64, 64, 64), (1, 2, 256, 32, 64, 64),
 ])

@@ -5,12 +5,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import spec_for_param
 from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_abstract_mesh
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
 
 
 class _Key:

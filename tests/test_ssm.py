@@ -1,12 +1,12 @@
 """Decay-linear-attention + SSM layer tests (chunked vs sequential is the
-load-bearing equivalence for chain-speculative verification)."""
+load-bearing equivalence for chain-speculative verification).  Randomized
+cases are seeded-parametrized (deterministic, no hypothesis dependency)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models.ssm import (decay_attention_chunked, decay_attention_seq,
@@ -14,9 +14,13 @@ from repro.models.ssm import (decay_attention_chunked, decay_attention_seq,
                               init_rwkv6)
 
 
-@given(st.integers(0, 10**6), st.sampled_from([16, 32, 64]),
-       st.integers(1, 3), st.booleans())
-@settings(max_examples=15, deadline=None)
+@pytest.mark.parametrize("seed,chunk,H,use_u", [
+    (0, 16, 1, False), (1, 16, 2, True), (2, 16, 3, False),
+    (3, 32, 1, True), (4, 32, 2, False), (5, 32, 3, True),
+    (6, 64, 1, False), (7, 64, 2, True), (8, 64, 3, False),
+    (9, 64, 3, True), (10, 32, 2, True), (11, 16, 1, True),
+    (12, 64, 1, True), (13, 32, 3, False), (14, 16, 2, False),
+])
 def test_chunked_equals_sequential(seed, chunk, H, use_u):
     key = jax.random.PRNGKey(seed)
     B, S, dk, dv = 2, 96, 16, 24

@@ -1,24 +1,28 @@
-"""TreeSpec invariants — unit + hypothesis property tests."""
+"""TreeSpec invariants — unit + seeded property tests.
+
+(The original suite used hypothesis; this environment has no package
+index, so random topologies are drawn deterministically per seed instead —
+same invariants, reproducible cases.)
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.trees import (TreeSpec, chain_tree, default_tree,
                               tree_from_rank_paths)
 
+SEEDS = list(range(30))
 
-@st.composite
-def tree_specs(draw):
-    n = draw(st.integers(2, 24))
-    parents = [-1]
-    for i in range(1, n):
-        parents.append(draw(st.integers(0, i - 1)))
+
+def random_tree(seed: int) -> TreeSpec:
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(2, 25))
+    parents = [-1] + [int(rng.randint(0, i)) for i in range(1, n)]
     return TreeSpec(tuple(parents))
 
 
-@given(tree_specs())
-@settings(max_examples=30, deadline=None)
-def test_ancestor_mask_properties(tree):
+@pytest.mark.parametrize("seed", SEEDS)
+def test_ancestor_mask_properties(seed):
+    tree = random_tree(seed)
     m = tree.ancestor_mask
     T = tree.size
     assert m.shape == (T, T)
@@ -30,9 +34,9 @@ def test_ancestor_mask_properties(tree):
             assert np.all(m[i] >= m[j] * 1)
 
 
-@given(tree_specs())
-@settings(max_examples=30, deadline=None)
-def test_depth_and_ancestors_consistent(tree):
+@pytest.mark.parametrize("seed", SEEDS)
+def test_depth_and_ancestors_consistent(seed):
+    tree = random_tree(seed)
     dep = tree.depth
     anc = tree.ancestors
     for i in range(tree.size):
@@ -43,9 +47,9 @@ def test_depth_and_ancestors_consistent(tree):
             assert anc[i, d] == n
 
 
-@given(tree_specs())
-@settings(max_examples=30, deadline=None)
-def test_child_rank_unique_per_parent(tree):
+@pytest.mark.parametrize("seed", SEEDS)
+def test_child_rank_unique_per_parent(seed):
+    tree = random_tree(seed)
     rank = tree.child_rank
     for p in range(tree.size):
         kids = [i for i in range(1, tree.size) if tree.parents[i] == p]

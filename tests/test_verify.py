@@ -1,10 +1,10 @@
 """Verification-criteria tests: greedy acceptance against brute-force
-sequential greedy; typical acceptance threshold behaviour."""
+sequential greedy; typical acceptance threshold behaviour.  Randomized
+cases are seeded-parametrized (deterministic, no hypothesis dependency)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.trees import chain_tree, default_tree
 from repro.core.verify import greedy_verify, typical_verify
@@ -33,8 +33,7 @@ def test_greedy_chain_matches_sequential():
     assert int(res.bonus_token[0]) == am[0, 4]
 
 
-@given(st.integers(0, 10000))
-@settings(max_examples=20, deadline=None)
+@pytest.mark.parametrize("seed", [7 * i + 1 for i in range(20)])
 def test_greedy_tree_vs_bruteforce(seed):
     tree = default_tree(12, 3, 3)
     T = tree.size
