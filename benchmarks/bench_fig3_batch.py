@@ -2,19 +2,48 @@
 autoregressive / Medusa / Hydra / Hydra++ (batched inference, §6.2).
 
 Served through the continuous-batching engine with the bucketed static
-scheduler as the baseline: each (variant, batch) cell reports tokens/s,
-tokens/step, slot utilization, and per-request latency (mean + p99) over
-the SAME ragged request stream, so the scheduling win is isolated from the
-draft-head win.
+scheduler as the baseline, plus the paged-KV continuous engine
+(DESIGN.md §6) running on a block pool that reserves only
+``POOL_FRAC`` of the dense ``max_batch x max_len`` footprint: each
+(variant, batch, engine) cell reports tokens/s, tokens/step, slot
+utilization, per-request latency (mean + p99), and — via the memory
+column (see ``common.serve_derived``) — the KV reservation, the peak
+blocks-in-use, and the resulting oversubscription factor, all over the
+SAME ragged request stream, so the scheduling and memory wins are
+isolated from the draft-head win.
+
+Memory-column caveat: ``kv_reserved_tok`` counts the PERSISTENT cache
+reservation only.  The current paged path is a gather/scatter shim
+(DESIGN.md §6), so each step still materializes the dense per-slot view
+as a transient — peak step memory is pool + view, not 0.25x dense.  The
+persistent-reservation win is what frees HBM between steps for more
+slots/weights; the transient goes away with the native paged
+tree-attention kernel (ROADMAP follow-up).
 """
 from __future__ import annotations
 
 from benchmarks.common import (base_setup, csv_row, draft_setup,
                                ragged_requests, serve_derived, timed_serve)
 from repro.core.trees import default_tree
-from repro.serving.engine import BucketedEngine, SpeculativeEngine
+from repro.serving.engine import (BucketedEngine, PagedSpeculativeEngine,
+                                  SpeculativeEngine)
 
-ENGINES = (("cont", SpeculativeEngine), ("buck", BucketedEngine))
+SERVE_MAX_LEN = 512     # timed_serve's dense per-slot reservation
+BLOCK_SIZE = 16
+POOL_FRAC = 0.25        # paged pool = 25% of the dense-equivalent HBM
+
+
+def paged_kwargs(max_batch: int) -> dict:
+    """Size the block pool to POOL_FRAC of dense max_batch x max_len —
+    the workload's dense-equivalent footprint exceeds the pool 4x, which
+    the run demonstrates by finishing with blocks to spare."""
+    usable = max(int(POOL_FRAC * max_batch * SERVE_MAX_LEN) // BLOCK_SIZE, 8)
+    return {"block_size": BLOCK_SIZE, "num_blocks": usable + 1}
+
+
+ENGINES = (("cont", SpeculativeEngine, lambda B: {}),
+           ("buck", BucketedEngine, lambda B: {}),
+           ("paged", PagedSpeculativeEngine, paged_kwargs))
 
 
 def run(batch_sizes=(1, 2, 4, 8), max_new_tokens: int = 32,
@@ -31,11 +60,12 @@ def run(batch_sizes=(1, 2, 4, 8), max_new_tokens: int = 32,
             else:
                 c2, dp = draft_setup(variant)
                 spec = True
-            for ename, engine_cls in ENGINES:
+            for ename, engine_cls, ekw in ENGINES:
                 reqs = ragged_requests(n_req, seed=0,
                                        max_new_tokens=max_new_tokens)
                 stats = timed_serve(engine_cls, params, dp, c2, tree, reqs,
-                                    max_batch=B, use_speculative=spec)
+                                    max_batch=B, use_speculative=spec,
+                                    engine_kwargs=ekw(B))
                 rows.append(csv_row(
                     f"fig3_{variant}_{ename}_b{B}",
                     1e6 / max(stats.tokens_per_s, 1e-9),

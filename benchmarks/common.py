@@ -136,21 +136,38 @@ def ragged_requests(n: int, *, seed: int = 0, min_len: int = 16,
 
 def timed_serve(engine_cls, params, dp, cfg, tree, requests, *,
                 max_batch: int = 8, use_speculative: bool = True,
-                criterion: str = "greedy"):
+                criterion: str = "greedy", engine_kwargs: dict | None = None):
     """Serve `requests` through `engine_cls`; returns the EngineStats
-    (tokens/s, slot utilization, per-request latency percentiles)."""
+    (tokens/s, slot utilization, per-request latency percentiles).
+    `engine_kwargs` forwards paged-cache geometry (block_size/num_blocks)."""
     eng = engine_cls(params, dp, cfg, tree, max_len=512,
-                     use_speculative=use_speculative, criterion=criterion)
+                     use_speculative=use_speculative, criterion=criterion,
+                     **(engine_kwargs or {}))
     return eng.serve(requests, max_batch=max_batch)
 
 
 def serve_derived(stats) -> str:
-    """The figure-3 derived-metric string for one engine run."""
-    return (f"tok_per_s={stats.tokens_per_s:.2f};"
-            f"tok_per_step={stats.tokens_per_step:.3f};"
-            f"slot_util={stats.slot_utilization:.3f};"
-            f"mean_lat_ms={stats.mean_latency_s * 1e3:.1f};"
-            f"p99_lat_ms={stats.p99_latency_s * 1e3:.1f}")
+    """The figure-3 derived-metric string for one engine run.  The memory
+    column reports cache positions: `kv_reserved_tok` is the persistent
+    HBM reservation (dense: max_batch x max_len; paged: the block pool),
+    `kv_peak_tok` the positions actually backed by blocks at the high-water
+    mark, and `oversub` the dense-equivalent / reserved ratio (> 1 means
+    the pool oversubscribes the dense footprint)."""
+    row = (f"tok_per_s={stats.tokens_per_s:.2f};"
+           f"tok_per_step={stats.tokens_per_step:.3f};"
+           f"slot_util={stats.slot_utilization:.3f};"
+           f"mean_lat_ms={stats.mean_latency_s * 1e3:.1f};"
+           f"p99_lat_ms={stats.p99_latency_s * 1e3:.1f}")
+    if stats.pool_tokens:                    # paged engine: memory column
+        row += (f";kv_reserved_tok={stats.pool_tokens}"
+                f";kv_peak_tok={stats.peak_pool_tokens}"
+                f";blocks_in_use={stats.peak_blocks_in_use}/"
+                f"{stats.num_blocks - 1}"
+                f";oversub={1.0 / stats.kv_pool_frac:.2f}x"
+                f";preempt={stats.preemptions}")
+    elif stats.dense_equiv_tokens:
+        row += f";kv_reserved_tok={stats.dense_equiv_tokens}"
+    return row
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

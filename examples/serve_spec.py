@@ -16,7 +16,8 @@ sys.path.insert(0, ".")  # for benchmarks.common when run from repo root
 
 from benchmarks.common import base_setup, draft_setup  # noqa: E402
 from repro.core.trees import default_tree  # noqa: E402
-from repro.serving.engine import (BucketedEngine, Request,  # noqa: E402
+from repro.serving.engine import (BucketedEngine,  # noqa: E402
+                                  PagedSpeculativeEngine, Request,
                                   SpeculativeEngine)
 
 
@@ -46,18 +47,26 @@ def main() -> None:
         else:
             c2, dp = draft_setup(mode)
             spec = True
-        for name, engine_cls in (("continuous", SpeculativeEngine),
-                                 ("bucketed", BucketedEngine)):
+        # paged: a block pool reserving 25% of the dense footprint
+        paged_kw = {"block_size": 16,
+                    "num_blocks": 1 + (args.batch * 512 // 4) // 16}
+        for name, engine_cls, ekw in (
+                ("continuous", SpeculativeEngine, {}),
+                ("paged", PagedSpeculativeEngine, paged_kw),
+                ("bucketed", BucketedEngine, {})):
             eng = engine_cls(params, dp, c2, tree, max_len=512,
-                             use_speculative=spec)
+                             use_speculative=spec, **ekw)
             rng.seed(0)  # identical workload for every engine/mode pair
             stats = eng.serve(make_requests(), max_batch=args.batch)
+            mem = (f" kv_pool={stats.pool_tokens}tok"
+                   f" peak_blocks={stats.peak_blocks_in_use}"
+                   if stats.pool_tokens else "")
             print(f"{mode:16s} {name:10s} steps={stats.steps:4d} "
                   f"tokens={stats.tokens:5d} "
                   f"tok/step={stats.tokens_per_step:5.2f} "
                   f"tok/s={stats.tokens_per_s:7.1f} "
                   f"util={stats.slot_utilization:.3f} "
-                  f"mean_lat={stats.mean_latency_s * 1e3:7.1f}ms")
+                  f"mean_lat={stats.mean_latency_s * 1e3:7.1f}ms{mem}")
 
 
 if __name__ == "__main__":

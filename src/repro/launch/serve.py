@@ -18,7 +18,8 @@ from repro.core.heads import init_draft_params
 from repro.core.trees import chain_tree, default_tree
 from repro.launch.specs import tree_for
 from repro.models.model import init_params
-from repro.serving.engine import BucketedEngine, Request, SpeculativeEngine
+from repro.serving.engine import (BucketedEngine, PagedSpeculativeEngine,
+                                  Request, SpeculativeEngine)
 
 
 def main() -> None:
@@ -32,8 +33,14 @@ def main() -> None:
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt lengths in [prompt-len/2, prompt-len]")
     ap.add_argument("--max-new-tokens", type=int, default=24)
-    ap.add_argument("--engine", choices=("continuous", "bucketed"),
+    ap.add_argument("--engine", choices=("continuous", "paged", "bucketed"),
                     default="continuous")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--pool-frac", type=float, default=0.5,
+                    help="paged engine: block-pool size as a fraction of "
+                         "the dense max_batch x max_len footprint "
+                         "(DESIGN.md §6)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
 
@@ -52,9 +59,17 @@ def main() -> None:
     print(f"[serve] arch={cfg.name} tree={tree.size} "
           f"(chain={tree.max_depth + 1 == tree.size})")
 
-    engine_cls = (SpeculativeEngine if args.engine == "continuous"
-                  else BucketedEngine)
-    eng = engine_cls(params, dp, cfg, tree, max_len=512)
+    max_len = 512
+    if args.engine == "paged":
+        usable = max(int(args.pool_frac * args.batch * max_len)
+                     // args.block_size, 4)
+        eng = PagedSpeculativeEngine(params, dp, cfg, tree, max_len=max_len,
+                                     block_size=args.block_size,
+                                     num_blocks=usable + 1)
+    else:
+        engine_cls = (SpeculativeEngine if args.engine == "continuous"
+                      else BucketedEngine)
+        eng = engine_cls(params, dp, cfg, tree, max_len=max_len)
     rs = np.random.RandomState(0)
     n_requests = args.requests or args.batch
     reqs = []
@@ -71,6 +86,12 @@ def main() -> None:
           f"util={stats.slot_utilization:.3f} "
           f"mean_lat={stats.mean_latency_s * 1e3:.1f}ms "
           f"p99_lat={stats.p99_latency_s * 1e3:.1f}ms")
+    if stats.pool_tokens:
+        print(f"[serve] paged KV: pool={stats.pool_tokens} tok "
+              f"(dense equivalent {stats.dense_equiv_tokens} tok, "
+              f"{1.0 / stats.kv_pool_frac:.1f}x oversubscribed) "
+              f"peak_blocks={stats.peak_blocks_in_use}/"
+              f"{stats.num_blocks - 1} preemptions={stats.preemptions}")
 
 
 if __name__ == "__main__":

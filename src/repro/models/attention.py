@@ -10,6 +10,12 @@ Two execution modes:
   New KV entries are written at ``cache_len + arange(T)`` — the speculative
   scratch region; `commit` (serving/cache.py) compacts accepted entries.
 
+The verify path is paging-agnostic: ``cache_k``/``cache_v`` are per-slot
+(B, S, ...) views in logical coordinates.  The paged serving engine
+(serving/paged.py, DESIGN.md §6) gathers that view from a global block
+pool through per-slot block tables and scatters it back after the step —
+a paged-read shim in front of these unmodified kernels.
+
 Param pytrees use a stacked leading layer axis when scanned.
 """
 from __future__ import annotations

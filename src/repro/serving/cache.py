@@ -2,7 +2,7 @@
 
 After a verify forward pass the per-group caches hold *candidates*:
 
-  attention groups ('k'/'v'): the full cache arrays with all T tree tokens
+  attention groups ('k'/'v'): the cache arrays with all T tree tokens
     written in the scratch region [len, len+T); commit compacts the accepted
     root-path entries to [len, len+n_accept+1).
   state groups ('ssd_state'/'conv_win'/'wkv_state'/'shift_*'): stacked
@@ -11,6 +11,13 @@ After a verify forward pass the per-group caches hold *candidates*:
 
 Both rules are pure gathers — no recompute — which is what makes chain
 speculation on SSM/hybrid architectures cheap (DESIGN.md §4).
+
+Commit always runs in LOGICAL cache coordinates: each attention array is
+the (B, S) per-slot view.  With the dense engine that view IS the
+persistent cache; with the paged engine (serving/paged.py, DESIGN.md §6)
+it is gathered from the global block pool through per-slot block tables
+before the step and scattered back after, so the compaction writes below
+land in slot-owned scratch blocks without commit knowing about paging.
 """
 from __future__ import annotations
 
@@ -46,12 +53,21 @@ def commit_cache(candidates, cache_len, path_nodes, n_accept, *,
     """candidates: cache pytree from a verify forward. Returns the committed
     cache (same structure as the pre-verify committed cache).
 
+    Attention compaction is block-table-agnostic: it gathers accepted
+    scratch entries [len+path] to [len, len+n_accept+1) *within the
+    logical view* it is handed.  Under the paged engine that view was
+    gathered from pool blocks and the writes scatter back into the slot's
+    own scratch blocks afterwards; under the dense engine the view is the
+    cache itself.  Either way nothing below ``cache_len`` is touched.
+
     ``active`` (B,) bool + ``prev`` (pre-verify committed cache) support
     continuous batching: rows with ``active=False`` must come out of the
     commit untouched.  Attention groups already do — their compaction only
     writes the scratch region [len, len+D1), which is beyond the frozen
-    ``cache_len`` — but state groups REPLACE the committed recurrent state
-    with a candidate, so inactive rows are restored from ``prev``."""
+    ``cache_len`` (for a paged released slot those writes land in the
+    shared NULL block, which is never read unmasked) — but state groups
+    REPLACE the committed recurrent state with a candidate, so inactive
+    rows are restored from ``prev``."""
     last_node = jnp.take_along_axis(path_nodes, n_accept[:, None],
                                     axis=1)[:, 0]          # (B,)
     out = []

@@ -1,24 +1,37 @@
 """Speculative serving engines (paper §6.2: batched inference).
 
-Two schedulers over the same jitted decode step:
+Three schedulers over the same jitted decode step:
 
-``SpeculativeEngine`` — continuous batching.  A fixed pool of ``max_batch``
-slots and a FIFO request queue.  A request joins the pool the moment a slot
-is free (per-slot prefill via ``join_slot``: variable prompt lengths are
-right-padded to a bucket and length-masked), decodes with its own per-slot
-``cache_len``/budget/EOS, and its slot is freed and refilled the moment it
-finishes.  Finished rows are masked out of the step with ``active`` (the
-static-shape forward still spans them, but they emit PAD, advance no cache,
-and are excluded from throughput/acceptance statistics) — the FLOP win
-comes from refilling freed slots with queued work instead of draining.
-The jitted step signature depends only on ``(max_batch, tree)`` — never on
-queue occupancy — so the engine compiles exactly one step (plus one prefill
-per prompt-length bucket).
+``SpeculativeEngine`` — continuous batching over a dense cache.  A fixed
+pool of ``max_batch`` slots and a FIFO request queue.  A request joins the
+pool the moment a slot is free (per-slot prefill via ``join_slot``:
+variable prompt lengths are right-padded to a bucket and length-masked),
+decodes with its own per-slot ``cache_len``/budget/EOS, and its slot is
+freed and refilled the moment it finishes.  Finished rows are masked out
+of the step with ``active`` (the static-shape forward still spans them,
+but they emit PAD, advance no cache, and are excluded from
+throughput/acceptance statistics) — the FLOP win comes from refilling
+freed slots with queued work instead of draining.  The jitted step
+signature depends only on ``(max_batch, tree)`` — never on queue
+occupancy — so the engine compiles exactly one step (plus one prefill per
+prompt-length bucket).
+
+``PagedSpeculativeEngine`` — the same scheduler over a paged KV cache
+(``serving/paged.py``, DESIGN.md §6).  Attention caches live in a global
+block pool that may be smaller than ``max_batch × max_len``
+(oversubscription); per-slot block tables are grown on demand by a
+host-side free-list allocator.  Exhaustion is never a crash: requests
+that don't fit wait in the queue (admission control), and when an active
+slot can no longer grow, the most-recently-joined slot is preempted —
+its blocks are freed and the request is requeued at the front, to be
+re-prefilled later from prompt + tokens-so-far (byte-exact under greedy
+decoding).
 
 ``BucketedEngine`` — the legacy static scheduler kept as the baseline:
-requests are grouped by exact prompt length, each batch runs to completion,
-and a batch's slowest row drains while the others idle.  Benchmarks (paper
-Figs. 2/3) report both so the slot-utilization win is measurable.
+requests are grouped by exact prompt length, each batch runs to
+completion, and a batch's slowest row drains while the others idle.
+Benchmarks (paper Figs. 2/3) report both so the slot-utilization win is
+measurable.
 """
 from __future__ import annotations
 
@@ -35,10 +48,22 @@ from repro.configs.base import ModelConfig
 from repro.core.speculative import (autoregressive_step, init_decode_state,
                                     init_pool_state, join_slot,
                                     spec_decode_step)
+from repro.serving.paged import (NULL_BLOCK, BlockAllocator, init_paged_state,
+                                 paged_autoregressive_step, paged_join_slot,
+                                 paged_spec_decode_step)
 
 
 @dataclass
 class Request:
+    """One generation request.
+
+    ``prompt`` is the token context; the engine appends every generated
+    token (including the one sampled at prefill) to ``output`` and sets
+    ``done`` when the budget is exhausted or ``eos_token`` is produced.
+    ``output`` survives preemption: a preempted request resumes by
+    re-prefilling ``prompt + output``.
+    """
+
     prompt: np.ndarray
     max_new_tokens: int = 64
     eos_token: Optional[int] = None
@@ -59,15 +84,50 @@ class Request:
 
 @dataclass
 class EngineStats:
+    """Accumulated serving counters (one instance per engine, across every
+    ``serve`` call).
+
+    Fields
+    ------
+    steps            jitted decode steps executed (prefills not counted)
+    tokens           tokens delivered to requests post-prefill (clamped at
+                     each request's budget; PAD / dead-slot emissions and
+                     the prefill token are excluded)
+    wall_s           wall-clock seconds inside the serving loop (warmup
+                     compiles excluded)
+    accept_lengths   per-step mean accepted+bonus length over live rows
+    active_slot_steps / capacity_slot_steps
+                     slot-occupancy accounting: capacity counts
+                     ``max_batch`` slots per step, active counts rows that
+                     held a live (not-yet-finished) request
+    request_latency_s per-request queue-to-finish latencies
+
+    Paged-cache accounting (all zero for dense engines):
+
+    block_size / num_blocks   pool geometry (tokens per block, physical
+                              blocks incl. the reserved NULL block)
+    pool_tokens               usable pool capacity in cache positions
+    dense_equiv_tokens        what a dense cache would reserve for the
+                              same serve call (``max_batch × max_len``)
+    peak_blocks_in_use        high-water mark of allocated blocks
+    preemptions               slots evicted to the queue on pool
+                              exhaustion (re-prefilled later)
+    """
+
     steps: int = 0
     tokens: int = 0
     wall_s: float = 0.0
     accept_lengths: List[float] = field(default_factory=list)
-    # slot-occupancy accounting: capacity counts max_batch slots per step,
-    # active counts the rows that held a live (not-yet-finished) request.
     active_slot_steps: int = 0
     capacity_slot_steps: int = 0
     request_latency_s: List[float] = field(default_factory=list)
+    # paged-KV accounting (zero when the cache is dense)
+    block_size: int = 0
+    num_blocks: int = 0
+    pool_tokens: int = 0
+    dense_equiv_tokens: int = 0
+    peak_blocks_in_use: int = 0
+    preemptions: int = 0
 
     @property
     def tokens_per_step(self) -> float:
@@ -91,9 +151,22 @@ class EngineStats:
         lat = self.request_latency_s
         return float(np.percentile(lat, 99)) if lat else 0.0
 
+    @property
+    def peak_pool_tokens(self) -> int:
+        """High-water mark of cache positions actually backed by blocks."""
+        return self.peak_blocks_in_use * self.block_size
+
+    @property
+    def kv_pool_frac(self) -> float:
+        """Pool reservation as a fraction of the dense-equivalent HBM
+        (< 1.0 means the pool oversubscribes ``max_batch × max_len``)."""
+        if not self.dense_equiv_tokens:
+            return 1.0
+        return self.pool_tokens / self.dense_equiv_tokens
+
 
 class _EngineBase:
-    """Shared jitted-step plumbing for both schedulers."""
+    """Shared jitted-step plumbing for all schedulers."""
 
     def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
                  max_len: int = 2048, criterion: str = "greedy",
@@ -107,6 +180,7 @@ class _EngineBase:
         self.criterion = criterion
         self.use_speculative = use_speculative
         self.temperature = temperature
+        self.epsilon = epsilon
         self.rng = jax.random.PRNGKey(seed)
         if use_speculative:
             self._step = jax.jit(lambda p, dp, st, act: spec_decode_step(
@@ -125,11 +199,33 @@ class _EngineBase:
 class SpeculativeEngine(_EngineBase):
     """Continuous-batching speculative engine (the default serving path).
 
-    ``prefill_bucket`` rounds prompt lengths up before the per-slot prefill
-    so the number of compiled join functions is bounded (one per bucket).
-    Architectures with recurrent state groups (mamba/rwkv) force exact-length
-    prefill — a recurrent state scanned over right-pad tokens would be
-    corrupted (see ``join_slot``).
+    Public API
+    ----------
+    ``serve(requests, max_batch=8, warmup=True) -> EngineStats`` is the
+    whole surface.  The lifecycle per request: **enqueue** (FIFO) ->
+    **join** the moment a slot frees (bucketed prefill emits the first
+    output token) -> **harvest** after every jitted step (accepted +
+    bonus tokens appended to ``Request.output``, clamped at
+    ``max_new_tokens``, cut at ``eos_token``) -> **finish** (slot freed
+    and refilled from the queue in the same loop iteration).  ``serve``
+    may be called repeatedly; ``stats`` accumulates across calls.
+
+    Active-mask semantics: the jitted step always spans ``max_batch``
+    rows.  Rows whose slot is empty or whose request finished ride along
+    with ``active=False`` — they emit PAD, advance no ``cache_len``, and
+    keep token/hidden/recurrent state bit-frozen — so occupancy never
+    retraces the step (one compile per ``(max_batch, tree)``).
+
+    ``prefill_bucket`` rounds prompt lengths up before the per-slot
+    prefill so the number of compiled join functions is bounded (one per
+    bucket).  Architectures with recurrent state groups (mamba/rwkv)
+    force exact-length prefill — a recurrent state scanned over right-pad
+    tokens would be corrupted (see ``join_slot``).
+
+    Subclass hooks (``_admit`` / ``_before_step`` / ``_release`` /
+    ``_advance`` / ``_post_serve``) are no-ops here; the paged engine
+    overrides them for block accounting — the serve loop itself is
+    scheduler-agnostic.
     """
 
     def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
@@ -149,23 +245,73 @@ class SpeculativeEngine(_EngineBase):
         b = self.prefill_bucket
         return max(-(-n // b) * b, b)
 
+    @property
+    def _scratch(self) -> int:
+        """Cache positions one verify step writes past ``cache_len``."""
+        return self.tree.size if self.use_speculative else 1
+
+    def _context(self, r: Request) -> np.ndarray:
+        """Prefill context: the prompt, plus tokens already generated when
+        the request is resuming after a preemption."""
+        ctx = np.asarray(r.prompt, np.int32)
+        if r.output:
+            ctx = np.concatenate([ctx, np.asarray(r.output, np.int32)])
+        return ctx
+
+    def _padded_context(self, r: Request):
+        """(bucket-padded prompt array, real length) for a join/rejoin."""
+        ctx = self._context(r)
+        n = len(ctx)
+        padded = np.zeros(self._pad_len(n), np.int32)
+        padded[:n] = ctx
+        return padded, n
+
+    def _warm_buckets(self, requests: List[Request]) -> set:
+        """Padded prompt lengths to precompile joins for."""
+        return {self._pad_len(len(r.prompt)) for r in requests}
+
     def _check_capacity(self, r: Request) -> None:
-        scratch = self.tree.size if self.use_speculative else 1
-        need = self._pad_len(len(r.prompt)) + r.max_new_tokens + scratch
+        need = self._pad_len(len(r.prompt)) + r.max_new_tokens + self._scratch
         if need > self.max_len:
             raise ValueError(
                 f"request needs {need} cache slots (padded prompt "
                 f"{self._pad_len(len(r.prompt))} + budget {r.max_new_tokens} "
-                f"+ {scratch} verify scratch) but max_len={self.max_len}")
+                f"+ {self._scratch} verify scratch) but max_len={self.max_len}")
 
     def _join(self, state, slot: int, r: Request):
-        n = len(r.prompt)
-        P = self._pad_len(n)
-        padded = np.zeros(P, np.int32)
-        padded[:n] = np.asarray(r.prompt, np.int32)
+        padded, n = self._padded_context(r)
         return self._join_fn(self.params, self.draft_params, state,
                              jnp.asarray(padded), jnp.int32(n),
                              jnp.int32(slot))
+
+    def _warm_join(self, state, P: int):
+        return self._join_fn(self.params, self.draft_params, state,
+                             jnp.zeros(P, jnp.int32), jnp.int32(1),
+                             jnp.int32(0))
+
+    # -- scheduler hooks (paged engine overrides; dense cache needs none) ----
+
+    def _init_pool(self, max_batch: int, rng):
+        # record the dense reservation so benchmarks can put dense and
+        # paged runs in the same memory column
+        self.stats.dense_equiv_tokens = max_batch * self.max_len
+        return init_pool_state(self.params, self.draft_params, self.cfg,
+                               max_batch, self.max_len, rng)
+
+    def _admit(self, r: Request) -> bool:
+        return True
+
+    def _before_step(self, state, slots, active, pending):
+        return state
+
+    def _advance(self, slot: int, n_tokens: int) -> None:
+        pass
+
+    def _release(self, slot: int) -> None:
+        pass
+
+    def _post_serve(self) -> None:
+        pass
 
     # -- serving -------------------------------------------------------------
 
@@ -178,18 +324,13 @@ class SpeculativeEngine(_EngineBase):
         active = np.zeros(max_batch, bool)
 
         self.rng, sub = jax.random.split(self.rng)
-        state = init_pool_state(self.params, self.draft_params, self.cfg,
-                                max_batch, self.max_len, sub)
+        state = self._init_pool(max_batch, sub)
 
         if warmup:  # compile the step + every join bucket outside the clock
             jax.block_until_ready(self._run_step(
                 state, jnp.asarray(active)).state.cache_len)
-            for P in sorted({self._pad_len(len(r.prompt))
-                             for r in requests}):
-                jax.block_until_ready(self._join_fn(
-                    self.params, self.draft_params, state,
-                    jnp.zeros(P, jnp.int32), jnp.int32(1), jnp.int32(0)
-                ).cache_len)
+            for P in sorted(self._warm_buckets(requests)):
+                jax.block_until_ready(self._warm_join(state, P).cache_len)
 
         # enqueue AFTER warmup so latency measures serving, not XLA compiles
         now = time.time()
@@ -198,10 +339,13 @@ class SpeculativeEngine(_EngineBase):
 
         t0 = time.time()
         while pending or active.any():
-            # refill every free slot before the next step
+            # refill every free slot before the next step (strict FIFO:
+            # a head-of-line request the pool can't admit blocks the rest)
             for si in range(max_batch):
                 if active[si] or not pending:
                     continue
+                if not self._admit(pending[0]):
+                    break
                 r = pending.popleft()
                 state = self._join(state, si, r)
                 r.t_join = time.time()
@@ -210,10 +354,19 @@ class SpeculativeEngine(_EngineBase):
                 if (len(r.output) >= r.max_new_tokens or
                         (r.eos_token is not None and tok0 == r.eos_token)):
                     self._finish(r)            # degenerate budget/EOS at t=0
+                    self._release(si)
                     continue
                 slots[si] = r
                 active[si] = True
+            # paged: grow block tables for the coming step, preempting the
+            # most-recently-joined slots back into `pending` on exhaustion
+            state = self._before_step(state, slots, active, pending)
             if not active.any():
+                if pending and not self._admit(pending[0]):
+                    raise RuntimeError(
+                        "pool deadlock: no active slots and the queue head "
+                        "cannot be admitted — the block pool is too small "
+                        "for this request stream")
                 continue
 
             res = self._run_step(state, jnp.asarray(active))
@@ -225,6 +378,7 @@ class SpeculativeEngine(_EngineBase):
             live = active.copy()
             for si in np.where(live)[0]:
                 r = slots[si]
+                self._advance(si, int(n_em[si]))
                 appended = 0
                 for t in emitted[si][:n_em[si]]:
                     # clamp at the budget: tokens past max_new_tokens are
@@ -241,17 +395,214 @@ class SpeculativeEngine(_EngineBase):
                     self._finish(r)
                     slots[si] = None
                     active[si] = False
+                    self._release(si)
             self.stats.steps += 1
             self.stats.accept_lengths.append(float(n_em[live].mean()))
             self.stats.active_slot_steps += int(live.sum())
             self.stats.capacity_slot_steps += max_batch
         self.stats.wall_s += time.time() - t0
+        self._post_serve()
         return self.stats
 
     def _finish(self, r: Request) -> None:
         r.done = True
         r.t_done = time.time()
         self.stats.request_latency_s.append(r.latency_s)
+
+
+class PagedSpeculativeEngine(SpeculativeEngine):
+    """Continuous batching over a paged KV cache (DESIGN.md §6).
+
+    Same scheduler and byte-identical greedy outputs as
+    ``SpeculativeEngine``, but attention caches live in a global block
+    pool of ``num_blocks × block_size`` cache positions instead of dense
+    ``max_batch × max_len`` stripes.  ``num_blocks=None`` sizes the pool
+    to the dense equivalent (no oversubscription); passing a smaller pool
+    oversubscribes HBM and relies on:
+
+      * **admission control** — a queued request joins only when its
+        initial coverage (padded prompt + verify scratch) fits the free
+        list; the queue head blocks the tail (strict FIFO);
+      * **growth** — before every step each active slot's table is grown
+        to cover ``cache_len + scratch``;
+      * **preemption** — when growth exhausts the pool, the most recently
+        joined slot is evicted: blocks freed, request requeued at the
+        FRONT, resumed later by re-prefilling prompt + output-so-far
+        (byte-exact under greedy; under sampling the resumed request
+        draws fresh randomness).
+
+    Per-request worst-case footprint must fit the pool outright (checked
+    up front), which guarantees a lone slot can always grow — preemption
+    therefore always makes progress.  Recurrent-state groups stay dense
+    per-slot (O(1) each, nothing to page).
+    """
+
+    def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 **kw):
+        super().__init__(params, draft_params, cfg, tree, **kw)
+        self.block_size = int(block_size)
+        self.blocks_per_slot = -(-self.max_len // self.block_size)   # M
+        self.num_blocks = num_blocks   # None => dense-equivalent, see serve
+        greedy = self.criterion == "greedy"
+        cfg_, tree_ = self.cfg, self.tree
+        if self.use_speculative:
+            self._step = jax.jit(
+                lambda p, dp, st, tbl, act: paged_spec_decode_step(
+                    p, dp, cfg_, tree_, st, tbl, criterion=self.criterion,
+                    temperature=self.temperature, epsilon=self.epsilon,
+                    active=act))
+        else:
+            self._step = jax.jit(
+                lambda p, _dp, st, tbl, act: paged_autoregressive_step(
+                    p, cfg_, st, tbl, greedy=greedy,
+                    temperature=self.temperature, active=act))
+        self._join_fn = jax.jit(
+            lambda p, dp, st, prompt, rl, slot, row: paged_join_slot(
+                p, dp, cfg_, st, prompt, rl, slot, row, greedy=greedy))
+
+    # -- jitted-call adapters (block table rides along as an operand) --------
+
+    def _run_step(self, state, active=None):
+        return self._step(self.params, self.draft_params, state,
+                          jnp.asarray(self._tables), active)
+
+    def _join(self, state, slot: int, r: Request):
+        padded, n = self._padded_context(r)
+        got = self._alloc.alloc(self._alloc.blocks_for(
+            max(len(padded), n + self._scratch)))
+        assert got is not None, "_admit must have checked the free list"
+        self._owned[slot] = got
+        self._tables[slot, :] = NULL_BLOCK
+        self._tables[slot, :len(got)] = got
+        self._slot_len[slot] = n
+        self._seq += 1
+        self._join_seq[slot] = self._seq
+        return self._join_fn(self.params, self.draft_params, state,
+                             jnp.asarray(padded), jnp.int32(n),
+                             jnp.int32(slot),
+                             jnp.asarray(self._tables[slot]))
+
+    def _warm_buckets(self, requests: List[Request]) -> set:
+        buckets = super()._warm_buckets(requests)
+        if self.num_blocks is not None and self.prefill_bucket > 1:
+            # preemption can resume a request with context up to
+            # prompt + budget - 1 tokens: precompile every bucket a resume
+            # could land in so the retrace never runs inside the clock.
+            # (Exact-length-prefill archs — prefill_bucket == 1 — would
+            # need one compile per possible length; there a resume pays
+            # its own compile instead, like any new prompt length does.)
+            for r in requests:
+                lo = self._pad_len(len(r.prompt))
+                hi = self._pad_len(len(r.prompt) + r.max_new_tokens - 1)
+                buckets.update(range(lo, hi + 1, self.prefill_bucket))
+        return buckets
+
+    def _warm_join(self, state, P: int):
+        # an all-NULL table row: warmup results are discarded, and the NULL
+        # block absorbs the garbage prefill writes
+        return self._join_fn(self.params, self.draft_params, state,
+                             jnp.zeros(P, jnp.int32), jnp.int32(1),
+                             jnp.int32(0),
+                             jnp.zeros(self.blocks_per_slot, jnp.int32))
+
+    # -- block accounting ----------------------------------------------------
+
+    def _init_pool(self, max_batch: int, rng):
+        nb = self.num_blocks or 1 + max_batch * self.blocks_per_slot
+        self._alloc = BlockAllocator(nb, self.block_size)
+        B, M = max_batch, self.blocks_per_slot
+        self._tables = np.zeros((B, M), np.int32)       # all rows -> NULL
+        self._owned: List[List[int]] = [[] for _ in range(B)]
+        self._slot_len = np.zeros(B, np.int64)          # committed tokens
+        self._join_seq = np.zeros(B, np.int64)          # preemption order
+        self._seq = 0
+        st = self.stats
+        st.block_size = self.block_size
+        st.num_blocks = nb
+        st.pool_tokens = (nb - 1) * self.block_size
+        st.dense_equiv_tokens = max_batch * self.max_len
+        return init_paged_state(self.params, self.draft_params, self.cfg,
+                                max_batch, nb, self.block_size, rng)
+
+    def _check_capacity(self, r: Request) -> None:
+        # worst-case lifetime coverage: the (padded) resumed context can
+        # reach prompt+budget tokens, plus one verify-scratch region
+        worst = (self._pad_len(len(r.prompt) + r.max_new_tokens)
+                 + self._scratch)
+        view_len = self.blocks_per_slot * self.block_size
+        if worst > view_len:
+            raise ValueError(
+                f"request needs {worst} cache slots but the per-slot view "
+                f"caps at {view_len} (max_len={self.max_len})")
+        if self.num_blocks is not None:
+            need = -(-worst // self.block_size)
+            usable = self.num_blocks - 1
+            if need > usable:
+                raise ValueError(
+                    f"request needs {need} cache blocks at its peak but the "
+                    f"pool only has {usable} usable blocks "
+                    f"(num_blocks={self.num_blocks} incl. the NULL block)")
+
+    def _admit(self, r: Request) -> bool:
+        n = len(r.prompt) + len(r.output)
+        need = self._alloc.blocks_for(max(self._pad_len(n),
+                                          n + self._scratch))
+        # headroom: keep one growth block per already-joined slot, so
+        # admitting this request doesn't immediately force a preemption
+        # (which would thrash: evict, readmit, re-prefill, evict ...).
+        # With no joined slots the headroom is zero, so the up-front
+        # worst-case check keeps the pool deadlock-free.
+        headroom = sum(1 for o in self._owned if o)
+        return need + headroom <= self._alloc.free_blocks
+
+    def _before_step(self, state, slots, active, pending):
+        """Grow every active slot's table to cover the coming step's
+        scratch region; preempt newest-first when the pool runs dry."""
+        order = sorted(np.where(active)[0], key=lambda s: self._join_seq[s])
+        for si in order:
+            if not active[si]:
+                continue                    # already preempted as a victim
+            while True:
+                need = (self._alloc.blocks_for(
+                    int(self._slot_len[si]) + self._scratch)
+                    - len(self._owned[si]))
+                if need <= 0:
+                    break
+                got = self._alloc.alloc(need)
+                if got is not None:
+                    base = len(self._owned[si])
+                    self._owned[si].extend(got)
+                    self._tables[si, base:base + len(got)] = got
+                    break
+                victim = max(np.where(active)[0],
+                             key=lambda s: self._join_seq[s])
+                self._preempt(int(victim), slots, active, pending)
+                if victim == si:
+                    break                   # evicted ourselves; stop growing
+        return state
+
+    def _preempt(self, si: int, slots, active, pending) -> None:
+        r = slots[si]
+        pending.appendleft(r)               # resume ASAP, FIFO preserved
+        slots[si] = None
+        active[si] = False
+        self._release(si)
+        self.stats.preemptions += 1
+
+    def _advance(self, slot: int, n_tokens: int) -> None:
+        self._slot_len[slot] += n_tokens    # host mirror of cache_len
+
+    def _release(self, slot: int) -> None:
+        if self._owned[slot]:
+            self._alloc.free(self._owned[slot])
+            self._owned[slot] = []
+        self._tables[slot, :] = NULL_BLOCK
+        self._slot_len[slot] = 0
+
+    def _post_serve(self) -> None:
+        self.stats.peak_blocks_in_use = max(self.stats.peak_blocks_in_use,
+                                            self._alloc.peak_in_use)
 
 
 class BucketedEngine(_EngineBase):

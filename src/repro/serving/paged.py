@@ -1,0 +1,286 @@
+"""Paged KV cache: vLLM-style block tables over a global block pool.
+
+The dense engine reserves one ``max_len`` KV stripe per slot, so HBM —
+not compute — caps ``max_batch``: a slot pays worst-case memory whether
+its request uses it or not.  Paging replaces the per-slot stripes with
+
+  * a global **block pool** per attention cache array:
+    ``(L, num_blocks, block_size, ...)`` instead of ``(L, B, max_len, ...)``
+    — persistent HBM is ``num_blocks × block_size`` tokens, which may be
+    far smaller than ``max_batch × max_len`` (oversubscription);
+  * a per-slot **block table** ``(B, blocks_per_slot)`` mapping logical
+    token-block j of the slot to a physical pool block.  A slot only owns
+    blocks for tokens it has actually committed plus the speculative
+    scratch region ``[len, len + T)`` (see DESIGN.md §6).
+
+Physical block 0 is the reserved **NULL block**: every unallocated table
+entry points at it.  It accumulates garbage writes (inactive rows' scratch,
+scatter-back of uncovered view regions) and is never read at an unmasked
+position — the verify mask only admits positions ``< cache_len`` or inside
+the tree scratch ``[len, len + T)``, both of which the allocator keeps
+covered by real, slot-owned blocks.
+
+Execution is a **paged-read/write shim** in front of the existing step:
+``gather_view`` assembles the per-slot dense view ``(L, B, M·bs, ...)``
+from the pool via the block table (the same operand a native paged
+attention kernel would stream block-by-block), the unmodified
+``spec_decode_step`` / ``join_slot`` run on that view, and
+``scatter_view`` writes the view back into the pool blocks.  Persistent
+state is paged; the view is a transient of the jitted step.
+
+Only attention-shaped caches are paged: the ``'k'``/``'v'`` keys of
+attn/shared-attn/MLA groups and the Hydra++ PrefixAttention cache, i.e.
+everything with a ``max_len`` sequence axis.  Recurrent-state groups
+(mamba2 ``ssd_state``/``conv_win``, rwkv6 ``wkv_state``/``shift_*``) are
+O(1) per slot — there is nothing to page — and stay dense per-slot arrays
+inside ``PagedState.pools`` (the documented asymmetry, DESIGN.md §6.5).
+
+The host-side ``BlockAllocator`` (free-list; alloc/free in O(n_blocks))
+lives here too; the serving policy around it — allocation on join, growth
+before every step, release on finish, preemption-to-queue on exhaustion —
+is ``serving/engine.py::PagedSpeculativeEngine``.
+"""
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.heads import init_prefix_cache
+from repro.core.speculative import (DecodeState, StepResult,
+                                    autoregressive_step, join_slot,
+                                    spec_decode_step)
+from repro.models.model import init_cache
+from repro.serving.cache import ATTN_KEYS
+
+NULL_BLOCK = 0
+
+
+# ---------------------------------------------------------------------------
+# host-side block allocator
+# ---------------------------------------------------------------------------
+
+
+class BlockAllocator:
+    """Free-list allocator over the global block pool (host side, eager).
+
+    Block ids are ``[1, num_blocks)`` — physical block 0 is the reserved
+    NULL block and is never handed out.  ``alloc`` is all-or-nothing: a
+    request for more blocks than are free returns ``None`` and changes
+    nothing, which is what lets the engine turn exhaustion into queueing /
+    preemption instead of a crash.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (one is the reserved NULL)")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        # pop() from the tail hands out ascending ids 1, 2, ...
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._allocated: set = set()
+        self.peak_in_use = 0
+
+    @property
+    def usable_blocks(self) -> int:
+        """Pool capacity excluding the NULL block."""
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return len(self._allocated)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to cover ``n_tokens`` logical cache positions."""
+        return -(-int(n_tokens) // self.block_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._allocated.update(got)
+        self.peak_in_use = max(self.peak_in_use, len(self._allocated))
+        return got
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert b in self._allocated, f"double/foreign free of block {b}"
+            self._allocated.discard(b)
+            self._free.append(b)
+
+
+# ---------------------------------------------------------------------------
+# device-side pool state + gather/scatter shim
+# ---------------------------------------------------------------------------
+
+
+class PagedState(NamedTuple):
+    """DecodeState with attention caches in pool layout.
+
+    ``pools`` mirrors the ``DecodeState.cache`` group structure, but every
+    attention key holds ``(L, num_blocks, block_size, ...)`` and every
+    recurrent-state key keeps its dense per-slot ``(L, B, ...)`` layout.
+    The block table is NOT part of the state — the engine owns it host-side
+    and passes it into each jitted step as a ``(B, M)`` int32 operand.
+    """
+
+    pools: Any
+    prefix_k: Optional[jnp.ndarray]      # (num_blocks, bs, Hkv, hd) or None
+    prefix_v: Optional[jnp.ndarray]
+    cache_len: jnp.ndarray               # (B,)
+    last_token: jnp.ndarray              # (B,)
+    last_hidden: jnp.ndarray             # (B, d)
+    rng: jnp.ndarray
+
+
+def init_paged_state(params, draft_params, cfg: ModelConfig, max_batch: int,
+                     num_blocks: int, block_size: int, rng) -> PagedState:
+    """Empty paged pool: attention caches as block pools, recurrent-state
+    groups dense per slot, every row idle."""
+    # init_cache already knows every per-arch group layout: instantiating it
+    # once with (batch=num_blocks, max_len=block_size) yields exactly the
+    # pool shape for attention keys, and once with (batch=max_batch) the
+    # per-slot shape for recurrent-state keys (which carry no seq axis).
+    attn_like = init_cache(cfg, num_blocks, block_size)
+    state_like = init_cache(cfg, max_batch, 1)
+    pools = []
+    for ga, gs in zip(attn_like, state_like):
+        pools.append({k: (ga[k] if k in ATTN_KEYS else gs[k]) for k in ga})
+    pk = pv = None
+    if draft_params is not None and "prefix" in draft_params:
+        pc = init_prefix_cache(cfg, num_blocks, block_size)
+        pk, pv = pc["k"], pc["v"]
+    return PagedState(
+        pools=pools, prefix_k=pk, prefix_v=pv,
+        cache_len=jnp.zeros((max_batch,), jnp.int32),
+        last_token=jnp.zeros((max_batch,), jnp.int32),
+        last_hidden=jnp.zeros((max_batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+        rng=rng)
+
+
+def _gather_attn(pool, table):
+    """pool (L, N, bs, *rest) + table (B, M) -> view (L, B, M*bs, *rest)."""
+    L, _, bs = pool.shape[:3]
+    B, M = table.shape
+    return pool[:, table].reshape(L, B, M * bs, *pool.shape[3:])
+
+
+def _scatter_attn(pool, view, table):
+    """Write a dense view back into its pool blocks.  Table entries that
+    alias the NULL block receive nondeterministic garbage — by construction
+    those regions are never read unmasked."""
+    L, _, bs = pool.shape[:3]
+    B, M = table.shape
+    return pool.at[:, table].set(
+        view.reshape(L, B, M, bs, *pool.shape[3:]).astype(pool.dtype))
+
+
+def gather_view(pstate: PagedState, table) -> DecodeState:
+    """Assemble the dense per-slot DecodeState view the existing step
+    functions consume.  ``table``: (B, M) int32 physical block ids."""
+    cache = [{k: (_gather_attn(a, table) if k in ATTN_KEYS else a)
+              for k, a in g.items()} for g in pstate.pools]
+    pk = pv = None
+    if pstate.prefix_k is not None:
+        pk = _gather_attn(pstate.prefix_k[None], table)[0]
+        pv = _gather_attn(pstate.prefix_v[None], table)[0]
+    return DecodeState(cache=cache, cache_len=pstate.cache_len,
+                       last_token=pstate.last_token,
+                       last_hidden=pstate.last_hidden,
+                       prefix_k=pk, prefix_v=pv, rng=pstate.rng)
+
+
+def scatter_view(pstate: PagedState, view: DecodeState, table) -> PagedState:
+    """Persist a stepped view back into the pool (attention keys scatter
+    through the table; recurrent-state keys pass through dense)."""
+    pools = [{k: (_scatter_attn(gp[k], gv[k], table) if k in ATTN_KEYS
+                  else gv[k])
+              for k in gp} for gp, gv in zip(pstate.pools, view.cache)]
+    pk, pv = pstate.prefix_k, pstate.prefix_v
+    if pk is not None:
+        pk = _scatter_attn(pk[None], view.prefix_k[None], table)[0]
+        pv = _scatter_attn(pv[None], view.prefix_v[None], table)[0]
+    return PagedState(pools=pools, prefix_k=pk, prefix_v=pv,
+                      cache_len=view.cache_len, last_token=view.last_token,
+                      last_hidden=view.last_hidden, rng=view.rng)
+
+
+# ---------------------------------------------------------------------------
+# paged step / join wrappers (jit these; shapes depend only on
+# (max_batch, blocks_per_slot, tree) — never on the block-table contents)
+# ---------------------------------------------------------------------------
+
+
+def paged_spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
+                           pstate: PagedState, table, *,
+                           criterion: str = "greedy", temperature: float = 0.7,
+                           epsilon: float = 0.15,
+                           active: Optional[jnp.ndarray] = None) -> StepResult:
+    """gather -> unmodified spec_decode_step -> scatter."""
+    view = gather_view(pstate, table)
+    res = spec_decode_step(params, draft_params, cfg, tree, view,
+                           criterion=criterion, temperature=temperature,
+                           epsilon=epsilon, active=active)
+    return StepResult(scatter_view(pstate, res.state, table),
+                      res.emitted, res.n_emitted)
+
+
+def paged_autoregressive_step(params, cfg: ModelConfig, pstate: PagedState,
+                              table, *, greedy: bool = True,
+                              temperature: float = 1.0,
+                              active: Optional[jnp.ndarray] = None
+                              ) -> StepResult:
+    view = gather_view(pstate, table)
+    res = autoregressive_step(params, cfg, view, greedy=greedy,
+                              temperature=temperature, active=active)
+    return StepResult(scatter_view(pstate, res.state, table),
+                      res.emitted, res.n_emitted)
+
+
+def paged_join_slot(params, draft_params, cfg: ModelConfig,
+                    pstate: PagedState, prompt, real_len, slot, table_row, *,
+                    greedy: bool = True) -> PagedState:
+    """Prefill one request into row ``slot``, writing through the slot's
+    (freshly allocated) block-table row.
+
+    Only the joining slot's view is gathered — a (1, M*bs, ...) strip per
+    cache array — so join cost is independent of ``max_batch``.  The
+    engine must have pointed ``table_row`` at blocks covering
+    ``[0, max(P, real_len + scratch))`` before calling: the padded prefill
+    writes ``[0, P)`` and the next verify step writes scratch at
+    ``[real_len, real_len + T)``.
+    """
+    t1 = table_row[None, :]                                   # (1, M)
+    cache1 = [{k: (_gather_attn(a, t1) if k in ATTN_KEYS
+                   else a[:, slot][:, None])
+               for k, a in g.items()} for g in pstate.pools]
+    pk = pv = None
+    if pstate.prefix_k is not None:
+        pk = _gather_attn(pstate.prefix_k[None], t1)[0]
+        pv = _gather_attn(pstate.prefix_v[None], t1)[0]
+    view1 = DecodeState(
+        cache=cache1, cache_len=jnp.zeros((1,), jnp.int32),
+        last_token=jnp.zeros((1,), jnp.int32),
+        last_hidden=jnp.zeros((1, cfg.d_model), pstate.last_hidden.dtype),
+        prefix_k=pk, prefix_v=pv, rng=pstate.rng)
+    joined = join_slot(params, draft_params, cfg, view1, prompt, real_len,
+                       jnp.int32(0), greedy=greedy)
+    pools = [{k: (_scatter_attn(gp[k], gj[k], t1) if k in ATTN_KEYS
+                  else gp[k].at[:, slot].set(gj[k][:, 0].astype(gp[k].dtype)))
+              for k in gp} for gp, gj in zip(pstate.pools, joined.cache)]
+    npk, npv = pstate.prefix_k, pstate.prefix_v
+    if npk is not None:
+        npk = _scatter_attn(npk[None], joined.prefix_k[None], t1)[0]
+        npv = _scatter_attn(npv[None], joined.prefix_v[None], t1)[0]
+    return PagedState(
+        pools=pools, prefix_k=npk, prefix_v=npv,
+        cache_len=pstate.cache_len.at[slot].set(joined.cache_len[0]),
+        last_token=pstate.last_token.at[slot].set(joined.last_token[0]),
+        last_hidden=pstate.last_hidden.at[slot].set(
+            joined.last_hidden[0].astype(pstate.last_hidden.dtype)),
+        rng=joined.rng)
