@@ -12,13 +12,14 @@ blocks-in-use, and the resulting oversubscription factor, all over the
 SAME ragged request stream, so the scheduling and memory wins are
 isolated from the draft-head win.
 
-Memory-column caveat: ``kv_reserved_tok`` counts the PERSISTENT cache
-reservation only.  The current paged path is a gather/scatter shim
-(DESIGN.md §6), so each step still materializes the dense per-slot view
-as a transient — peak step memory is pool + view, not 0.25x dense.  The
-persistent-reservation win is what frees HBM between steps for more
-slots/weights; the transient goes away with the native paged
-tree-attention kernel (ROADMAP follow-up).
+Memory columns: ``kv_reserved_tok`` is the PERSISTENT cache reservation;
+``step_transient_tok`` is what one jitted step materializes on top of it.
+With the native paged tree-attention kernel (the default data path since
+DESIGN.md §6.6) the paged engine's transient is just the
+``max_batch × T`` scratch writes — the old gather/scatter shim's
+dense-view transient (``max_batch × max_len``, visible by rerunning with
+``paged_attention="shim"``) is gone, so peak step memory really is
+pool + O(B·T), i.e. 0.25x dense end to end at ``POOL_FRAC=0.25``.
 """
 from __future__ import annotations
 

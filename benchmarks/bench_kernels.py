@@ -1,8 +1,28 @@
 """Kernel micro-benchmarks: interpret-mode allclose status + jnp-path
 wall-clock (CPU proxy; real perf characterization is the dry-run roofline,
-see benchmarks/roofline.py)."""
+see benchmarks/roofline.py).
+
+Besides the CSV rows, ``run()`` writes ``results/bench_kernels.json``
+(uploaded as a CI artifact) whose ``tree_attention_paged_sweep`` section
+compares the three tree-attention data paths at several pool occupancies:
+
+  dense  — dense per-slot cache, dense kernel (the non-paged engine);
+  shim   — block pool gathered to the dense view, dense kernel on the
+           view (the pre-native paged path, now the parity oracle);
+  paged  — native block-table kernel streaming the pool in place.
+
+The load-bearing column is ``transient_bytes``: the per-step K/V bytes a
+path materializes/moves on top of the persistent cache.  The shim's is
+the gathered view — ``max_batch × max_len``-shaped regardless of
+occupancy — while the paged kernel's is the blocks its tables actually
+reach below ``cache_len``, so it scales with allocated blocks.  Wall
+times are CPU jnp-path proxies (the kernels themselves are verified via
+max-err against their oracles, in interpret mode).
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -14,8 +34,13 @@ from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.linear_attn_chunk.kernel import linear_attn_chunk
 from repro.kernels.linear_attn_chunk.ref import linear_attn_ref
-from repro.kernels.tree_attention.kernel import tree_attention
-from repro.kernels.tree_attention.ref import tree_attention_ref
+from repro.kernels.tree_attention.kernel import (tree_attention,
+                                                 tree_attention_paged)
+from repro.kernels.tree_attention.ref import (tree_attention_paged_ref,
+                                              tree_attention_ref)
+
+RESULTS_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "bench_kernels.json")
 
 
 def _timeit(fn, *args, n=5):
@@ -26,6 +51,79 @@ def _timeit(fn, *args, n=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / n * 1e6  # us
+
+
+def tree_attention_paged_sweep(*, B=2, Hq=4, Hkv=2, D=64, T=16,
+                               max_len=512) -> list:
+    """dense-vs-shim-vs-paged parity + transient-memory model, swept over
+    block size and pool occupancy.  Returns JSON-able dicts."""
+    key = jax.random.PRNGKey(1)
+    r = lambda i, s: jax.random.normal(jax.random.fold_in(key, i), s)
+    tm = jnp.tril(jnp.ones((T, T), bool))
+    tk, tv = r(0, (B, Hkv, T, D)), r(1, (B, Hkv, T, D))
+    q = r(2, (B, Hq, T, D))
+    itemsize = 4                                   # float32 benchmarks
+    out = []
+    for bs in (16, 128):
+        M = max_len // bs
+        num_blocks = 1 + B * M                     # dense-equivalent pool
+        pool_k, pool_v = r(3, (num_blocks, bs, Hkv, D)), r(
+            4, (num_blocks, bs, Hkv, D))
+        for occupancy in (0.25, 0.5, 1.0):
+            lens = np.full(B, int(occupancy * max_len) - T, np.int64)
+            lens = np.maximum(lens, 1)
+            table = np.zeros((B, M), np.int32)
+            nxt = 1
+            for b in range(B):
+                for j in range(-(-int(lens[b] + T) // bs)):
+                    table[b, j] = nxt
+                    nxt += 1
+            allocated = int((table != 0).sum())
+            lens_j = jnp.asarray(lens, jnp.int32)
+            table_j = jnp.asarray(table)
+
+            # the three data paths (kernels in interpret mode for max-err,
+            # jnp refs for CPU wall-clock proxies)
+            gather = jax.jit(lambda pk, t: pk[t].reshape(
+                B, M * bs, Hkv, D).transpose(0, 2, 1, 3))
+            ck, cv = gather(pool_k, table_j), gather(pool_v, table_j)
+            o_dense = tree_attention(q, ck, cv, tk, tv, tm, lens_j,
+                                     bk=bs, interpret=True)
+            o_paged = tree_attention_paged(q, pool_k, pool_v, tk, tv, tm,
+                                           lens_j, table_j, interpret=True)
+            err = float(jnp.max(jnp.abs(o_dense - o_paged)))
+
+            dense_us = _timeit(
+                lambda a: tree_attention_ref(a, ck, cv, tk, tv, tm, lens_j),
+                q)
+            shim_us = _timeit(
+                lambda a: tree_attention_ref(
+                    a, gather(pool_k, table_j), gather(pool_v, table_j),
+                    tk, tv, tm, lens_j), q)
+            paged_us = _timeit(
+                lambda a: tree_attention_paged_ref(
+                    a, pool_k, pool_v, tk, tv, tm, lens_j, table_j), q)
+
+            kv_elem = Hkv * D * itemsize * 2       # K and V, per position
+            blocks_touched = int(sum(-(-int(l) // bs) for l in lens))
+            out.append({
+                "B": B, "Hq": Hq, "Hkv": Hkv, "D": D, "T": T,
+                "max_len": max_len, "block_size": bs,
+                "occupancy": occupancy,
+                "cache_len": int(lens[0]),
+                "allocated_blocks": allocated,
+                "paged_vs_dense_max_err": err,
+                "dense_us": dense_us, "shim_us": shim_us,
+                "paged_us": paged_us,
+                # per-step K/V bytes on top of the persistent cache:
+                # shim materializes the dense view; the paged kernel
+                # streams exactly the blocks its tables reach (+ the T
+                # scratch writes), so its column tracks allocated blocks
+                "shim_transient_bytes": B * M * bs * kv_elem,
+                "paged_transient_bytes": (blocks_touched * bs + B * T)
+                * kv_elem,
+            })
+    return out
 
 
 def run() -> list:
@@ -66,6 +164,23 @@ def run() -> list:
     us = _timeit(lambda a: linear_attn_ref(a, kl, vl, w, u), ql)
     rows.append(csv_row("kernel_linear_attn_chunk", us,
                         f"interpret_max_err={err:.2e};S={S}"))
+
+    # dense vs shim vs paged tree attention, JSON artifact
+    sweep = tree_attention_paged_sweep()
+    for s in sweep:
+        rows.append(csv_row(
+            f"kernel_tree_attention_paged_bs{s['block_size']}"
+            f"_occ{s['occupancy']:g}",
+            s["paged_us"],
+            f"paged_vs_dense_max_err={s['paged_vs_dense_max_err']:.2e};"
+            f"allocated_blocks={s['allocated_blocks']};"
+            f"shim_transient_bytes={s['shim_transient_bytes']};"
+            f"paged_transient_bytes={s['paged_transient_bytes']}"))
+    os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
+    with open(RESULTS_JSON, "w") as f:
+        json.dump({"tree_attention_paged_sweep": sweep, "csv_rows": rows},
+                  f, indent=2)
+    print(f"wrote {os.path.normpath(RESULTS_JSON)}", flush=True)
     return rows
 
 

@@ -148,25 +148,31 @@ def timed_serve(engine_cls, params, dp, cfg, tree, requests, *,
 
 def serve_derived(stats) -> str:
     """The figure-3 derived-metric string for one engine run.  The memory
-    column reports cache positions: `kv_reserved_tok` is the persistent
+    columns report cache positions: `kv_reserved_tok` is the persistent
     HBM reservation (dense: max_batch x max_len; paged: the block pool),
     `kv_peak_tok` the positions actually backed by blocks at the high-water
-    mark, and `oversub` the dense-equivalent / reserved ratio (> 1 means
-    the pool oversubscribes the dense footprint)."""
+    mark, `oversub` the dense-equivalent / reserved ratio (> 1 means the
+    pool oversubscribes the dense footprint), and `step_transient_tok`
+    the positions one jitted step materializes ON TOP of the reservation
+    (0 dense in-place; max_batch x T for the native paged kernel;
+    max_batch x max_len when any layer takes the per-layer gather
+    fallback — windowed groups, MLA — or under the shim oracle)."""
     row = (f"tok_per_s={stats.tokens_per_s:.2f};"
            f"tok_per_step={stats.tokens_per_step:.3f};"
            f"slot_util={stats.slot_utilization:.3f};"
            f"mean_lat_ms={stats.mean_latency_s * 1e3:.1f};"
            f"p99_lat_ms={stats.p99_latency_s * 1e3:.1f}")
-    if stats.pool_tokens:                    # paged engine: memory column
+    if stats.pool_tokens:                    # paged engine: memory columns
         row += (f";kv_reserved_tok={stats.pool_tokens}"
                 f";kv_peak_tok={stats.peak_pool_tokens}"
                 f";blocks_in_use={stats.peak_blocks_in_use}/"
                 f"{stats.num_blocks - 1}"
                 f";oversub={1.0 / stats.kv_pool_frac:.2f}x"
-                f";preempt={stats.preemptions}")
+                f";preempt={stats.preemptions}"
+                f";step_transient_tok={stats.step_transient_tokens}")
     elif stats.dense_equiv_tokens:
-        row += f";kv_reserved_tok={stats.dense_equiv_tokens}"
+        row += (f";kv_reserved_tok={stats.dense_equiv_tokens}"
+                f";step_transient_tok=0")
     return row
 
 

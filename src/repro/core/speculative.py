@@ -169,12 +169,19 @@ def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
                      state: DecodeState, *, criterion: str = "greedy",
                      temperature: float = 0.7, epsilon: float = 0.15,
                      alpha: Optional[float] = None,
-                     active: Optional[jnp.ndarray] = None) -> StepResult:
+                     active: Optional[jnp.ndarray] = None,
+                     block_table: Optional[jnp.ndarray] = None) -> StepResult:
     """``active`` (B,) bool: rows that hold a live request.  Inactive rows
     ride along in the batch (the forward still runs over them — shapes are
     static) but emit PAD, advance no cache, and keep their state bit-frozen,
     which is what lets a continuous-batching engine free and refill slots
-    without retracing.  ``active=None`` means all rows live (legacy path)."""
+    without retracing.  ``active=None`` means all rows live (legacy path).
+
+    ``block_table`` (B, M) int32 switches the cache layout: ``state.cache``
+    attention arrays (and the Hydra++ prefix cache) are then global block
+    pools streamed through the table by the native paged kernel, and the
+    commit compaction moves accepted entries inside slot-owned blocks —
+    the whole step runs without ever assembling a dense per-slot view."""
     B = state.last_token.shape[0]
     T = tree.size
     depth = jnp.asarray(tree.depth)
@@ -187,7 +194,8 @@ def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
     # 2. verify: one base forward over the T tree tokens
     positions = state.cache_len[:, None] + depth[None, :]
     out = forward(params, cfg, tokens, positions, mode="verify",
-                  cache=state.cache, cache_len=state.cache_len, tree_mask=tm)
+                  cache=state.cache, cache_len=state.cache_len, tree_mask=tm,
+                  block_table=block_table)
 
     # 3. accept
     rng, sub = jax.random.split(state.rng)
@@ -202,7 +210,8 @@ def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
 
     # 4. commit
     new_cache = commit_cache(out.cache, state.cache_len, res.path_nodes,
-                             res.n_accept, active=active, prev=state.cache)
+                             res.n_accept, active=active, prev=state.cache,
+                             block_table=block_table)
     D1 = res.path_nodes.shape[1]
     bidx = jnp.arange(B)[:, None]
     acc_hidden = out.hidden[bidx, res.path_nodes]          # (B, D1, d)
@@ -212,8 +221,10 @@ def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
         ph, nk, nv = prefix_forward(
             draft_params, cfg, acc_hidden, ppos,
             cache_k=state.prefix_k, cache_v=state.prefix_v,
-            cache_len=state.cache_len, tree_mask=None)     # chain mask
-        pk, pv = commit_prefix_cache(nk, nv, state.cache_len, res.path_nodes)
+            cache_len=state.cache_len, tree_mask=None,     # chain mask
+            block_table=block_table)
+        pk, pv = commit_prefix_cache(nk, nv, state.cache_len, res.path_nodes,
+                                     block_table=block_table)
         h_next = jnp.take_along_axis(
             ph, res.n_accept[:, None, None], axis=1)[:, 0]
     else:
@@ -261,13 +272,15 @@ def spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
 
 def autoregressive_step(params, cfg: ModelConfig, state: DecodeState, *,
                         greedy: bool = True, temperature: float = 1.0,
-                        active: Optional[jnp.ndarray] = None) -> StepResult:
+                        active: Optional[jnp.ndarray] = None,
+                        block_table: Optional[jnp.ndarray] = None
+                        ) -> StepResult:
     B = state.last_token.shape[0]
     tokens = state.last_token[:, None]
     positions = state.cache_len[:, None]
     out = forward(params, cfg, tokens, positions, mode="verify",
                   cache=state.cache, cache_len=state.cache_len,
-                  tree_mask=None)
+                  tree_mask=None, block_table=block_table)
     rng, sub = jax.random.split(state.rng)
     logits = out.logits[:, 0]
     if greedy:
@@ -278,7 +291,8 @@ def autoregressive_step(params, cfg: ModelConfig, state: DecodeState, *,
     path = jnp.zeros((B, 1), jnp.int32)
     zero = jnp.zeros((B,), jnp.int32)
     new_cache = commit_cache(out.cache, state.cache_len, path, zero,
-                             active=active, prev=state.cache)
+                             active=active, prev=state.cache,
+                             block_table=block_table)
     emitted = nxt[:, None]
     n_emitted = jnp.ones((B,), jnp.int32)
     cache_len = state.cache_len + 1

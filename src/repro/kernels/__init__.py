@@ -6,9 +6,17 @@
 jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` around
 0.5.x; the installed toolchain may carry either name.  Kernels import
 ``tpu_compiler_params`` from here instead of touching ``pltpu`` directly.
+
+``resolve_interpret`` is the shared backend auto-detect for every kernel
+entry point's ``interpret=None`` default: on a real TPU the kernels
+compile through Mosaic; everywhere else (CPU CI, tests) they run in
+interpret mode.  Passing an explicit bool always wins.
 """
 from __future__ import annotations
 
+from functools import lru_cache
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 _COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
@@ -19,3 +27,16 @@ def tpu_compiler_params(*, dimension_semantics, **kwargs):
     """Construct TPU compiler params under either pltpu API name."""
     return _COMPILER_PARAMS_CLS(dimension_semantics=dimension_semantics,
                                 **kwargs)
+
+
+@lru_cache(maxsize=1)
+def _interpret_default() -> bool:
+    # Resolved once per process: the backend does not change under our feet,
+    # and jax.default_backend() is not free on every kernel call.
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> interpret unless running on a real TPU (so TPU runs
+    compile instead of silently interpreting); an explicit bool wins."""
+    return _interpret_default() if interpret is None else bool(interpret)

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import resolve_interpret, tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -69,8 +69,11 @@ def _flash_body(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
                                              "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    bq: int = 128, bk: int = 128, interpret: bool = True):
-    """q: (B,Hq,S,D); k/v: (B,Hkv,S,D). Returns (B,Hq,S,D)."""
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    """q: (B,Hq,S,D); k/v: (B,Hkv,S,D). Returns (B,Hq,S,D).
+    interpret: None => auto (compile on TPU, interpret elsewhere)."""
+    interpret = resolve_interpret(interpret)
     B, Hq, S, D = q.shape
     Hkv = k.shape[1]
     G = Hq // Hkv

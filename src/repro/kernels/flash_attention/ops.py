@@ -7,7 +7,7 @@ from repro.kernels.flash_attention.kernel import flash_attention
 
 
 def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """q: (B,S,Hq,D); k/v: (B,S,Hkv,D) — model-native layout."""
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)

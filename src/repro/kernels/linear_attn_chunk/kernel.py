@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import resolve_interpret, tpu_compiler_params
 
 LOG_DECAY_CLAMP = -20.0
 
@@ -72,10 +72,12 @@ def _chunk_body(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_sc, *,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "use_u", "interpret"))
 def linear_attn_chunk(r, k, v, w_log, u=None, *, chunk: int = 64,
-                      use_u: bool = True, interpret: bool = True):
+                      use_u: bool = True, interpret: bool | None = None):
     """r/k/w_log: (B,H,S,dk); v: (B,H,S,dv); u: (H,dk). Returns o (B,H,S,dv).
 
-    S must be a chunk multiple (ops.py pads)."""
+    S must be a chunk multiple (ops.py pads).
+    interpret: None => auto (compile on TPU, interpret elsewhere)."""
+    interpret = resolve_interpret(interpret)
     B, H, S, dk = k.shape
     dv = v.shape[-1]
     assert S % chunk == 0

@@ -7,7 +7,7 @@ from repro.kernels.linear_attn_chunk.kernel import linear_attn_chunk
 
 
 def linear_attn_bshd(r, k, v, w_log, u=None, *, chunk: int = 64,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """r/k/w_log: (B,S,H,dk); v: (B,S,H,dv)."""
     B, S, H, dk = k.shape
     Sp = -(-S // chunk) * chunk

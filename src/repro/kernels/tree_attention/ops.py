@@ -1,26 +1,57 @@
-"""Jit'd wrapper: model layout + T padding to MXU-friendly multiples."""
+"""Jit'd wrappers: model layout + T padding to MXU-friendly multiples.
+
+``tree_attention_bshd`` takes the dense per-slot cache; ``tree_attention_
+paged_bshd`` takes the global block pool + per-slot block tables and is
+what the paged serving engine's verify path calls (models/attention.py).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.tree_attention.kernel import tree_attention
+from repro.kernels.tree_attention.kernel import (tree_attention,
+                                                 tree_attention_paged)
+
+
+def _pad_tree(q, tree_k, tree_v, tree_mask, pad_to: int):
+    """Pad the tree axis T up to a multiple of pad_to; padded query rows
+    self-attend (diag True) so their softmax is well-defined."""
+    T = q.shape[1]
+    Tp = -(-T // pad_to) * pad_to
+    if Tp == T:
+        return q, tree_k, tree_v, tree_mask, T
+    padT = lambda t: jnp.pad(t, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    tm = jnp.zeros((Tp, Tp), bool).at[:T, :T].set(tree_mask)
+    tm = tm.at[jnp.arange(T, Tp), jnp.arange(T, Tp)].set(True)
+    return padT(q), padT(tree_k), padT(tree_v), tm, T
 
 
 def tree_attention_bshd(q, cache_k, cache_v, tree_k, tree_v, tree_mask,
-                        cache_len, *, pad_to: int = 8, interpret: bool = True):
-    """q: (B,T,Hq,D); cache/tree k,v: (B,S|T,Hkv,D); tree_mask (T,T)."""
-    B, T, Hq, D = q.shape
-    Tp = -(-T // pad_to) * pad_to
-    if Tp != T:
-        padT = lambda t: jnp.pad(t, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
-        q, tree_k, tree_v = padT(q), padT(tree_k), padT(tree_v)
-        tm = jnp.zeros((Tp, Tp), bool).at[:T, :T].set(tree_mask)
-        tm = tm.at[jnp.arange(T, Tp), jnp.arange(T, Tp)].set(True)
-        tree_mask = tm
+                        cache_len, *, pad_to: int = 8,
+                        interpret: bool | None = None):
+    """q: (B,T,Hq,D); cache/tree k,v: (B,S|T,Hkv,D); tree_mask (T,T).
+    interpret: None => auto (compile on TPU, interpret elsewhere)."""
+    q, tree_k, tree_v, tree_mask, T = _pad_tree(q, tree_k, tree_v,
+                                                tree_mask, pad_to)
     o = tree_attention(q.transpose(0, 2, 1, 3),
                        cache_k.transpose(0, 2, 1, 3),
                        cache_v.transpose(0, 2, 1, 3),
                        tree_k.transpose(0, 2, 1, 3),
                        tree_v.transpose(0, 2, 1, 3),
                        tree_mask, cache_len, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)[:, :T]
+
+
+def tree_attention_paged_bshd(q, pool_k, pool_v, tree_k, tree_v, tree_mask,
+                              cache_len, block_table, *, pad_to: int = 8,
+                              interpret: bool | None = None):
+    """q/tree k,v: (B,T,H*,D) model layout; pool_k/v: the global pool
+    (num_blocks, block_size, Hkv, D) — streamed in place, never gathered;
+    block_table: (B, M) int32.  Returns (B,T,Hq,D)."""
+    q, tree_k, tree_v, tree_mask, T = _pad_tree(q, tree_k, tree_v,
+                                                tree_mask, pad_to)
+    o = tree_attention_paged(q.transpose(0, 2, 1, 3), pool_k, pool_v,
+                             tree_k.transpose(0, 2, 1, 3),
+                             tree_v.transpose(0, 2, 1, 3),
+                             tree_mask, cache_len, block_table,
+                             interpret=interpret)
     return o.transpose(0, 2, 1, 3)[:, :T]

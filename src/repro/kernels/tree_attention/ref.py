@@ -5,9 +5,30 @@ import jax
 import jax.numpy as jnp
 
 
+def tree_attention_paged_ref(q, pool_k, pool_v, tree_k, tree_v, tree_mask,
+                             cache_len, block_table):
+    """Oracle for kernel.tree_attention_paged: assembles the dense logical
+    view through the block table (the very shim the kernel kills), but
+    masks NULL-table positions so the reserved block's contents can never
+    leak into the output — matching the kernel's compute-skip exactly.
+
+    q: (B,Hq,T,D); pool_k/v: (N, bs, Hkv, D); block_table: (B, M)."""
+    B = q.shape[0]
+    bs = pool_k.shape[1]
+    M = block_table.shape[1]
+    ck = pool_k[block_table].reshape(B, M * bs, *pool_k.shape[2:])
+    cv = pool_v[block_table].reshape(B, M * bs, *pool_v.shape[2:])
+    covered = jnp.repeat(block_table != 0, bs, axis=1)       # (B, M*bs)
+    return tree_attention_ref(q, ck.transpose(0, 2, 1, 3),
+                              cv.transpose(0, 2, 1, 3), tree_k, tree_v,
+                              tree_mask, cache_len, kv_valid=covered)
+
+
 def tree_attention_ref(q, cache_k, cache_v, tree_k, tree_v, tree_mask,
-                       cache_len):
-    """Same contract as kernel.tree_attention."""
+                       cache_len, kv_valid=None):
+    """Same contract as kernel.tree_attention.  ``kv_valid``: optional
+    (B, S) bool — cache positions additionally masked out when False
+    (NULL-block holes in the paged layout)."""
     B, Hq, T, D = q.shape
     Hkv, S = cache_k.shape[1], cache_k.shape[2]
     G = Hq // Hkv
@@ -18,6 +39,8 @@ def tree_attention_ref(q, cache_k, cache_v, tree_k, tree_v, tree_mask,
     kv_pos = jnp.arange(S + T)
     in_cache = kv_pos[None, :] < cache_len[:, None]                 # (B, S+T)
     in_cache = in_cache & (kv_pos[None, :] < S)
+    if kv_valid is not None:
+        in_cache = in_cache & jnp.pad(kv_valid, ((0, 0), (0, T)))
     tm_full = jnp.zeros((T, S + T), bool).at[:, S:].set(tree_mask)
     mask = in_cache[:, None, None, :] | tm_full[None, None]
     s = jnp.where(mask, s, -jnp.inf)

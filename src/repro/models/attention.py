@@ -10,11 +10,19 @@ Two execution modes:
   New KV entries are written at ``cache_len + arange(T)`` — the speculative
   scratch region; `commit` (serving/cache.py) compacts accepted entries.
 
-The verify path is paging-agnostic: ``cache_k``/``cache_v`` are per-slot
-(B, S, ...) views in logical coordinates.  The paged serving engine
-(serving/paged.py, DESIGN.md §6) gathers that view from a global block
-pool through per-slot block tables and scatters it back after the step —
-a paged-read shim in front of these unmodified kernels.
+The verify path speaks two cache layouts (DESIGN.md §6):
+
+* dense: ``cache_k``/``cache_v`` are per-slot (B, S, ...) arrays in
+  logical coordinates (``block_table`` None);
+* paged: ``cache_k``/``cache_v`` are the global block pool
+  ``(num_blocks, block_size, ...)`` and ``block_table`` (B, M) maps each
+  slot's logical token-blocks to physical pool blocks.  New K/V scatter
+  through the table at token granularity (O(B·T), no dense transient) and
+  attention streams pool blocks natively via the
+  ``tree_attention_paged`` Pallas kernel.  Layers the kernel doesn't
+  cover (sliding-window groups, MLA's absorbed latent math) fall back to
+  a per-layer table gather — a one-layer-at-a-time transient, never the
+  all-layer dense view the old gather/scatter shim materialized.
 
 Param pytrees use a stacked leading layer axis when scanned.
 """
@@ -26,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.tree_attention.ops import tree_attention_paged_bshd
 from repro.models.layers import (apply_rope, blocked_attention, dense_init,
                                  masked_attention, rope_sincos)
 
@@ -34,12 +43,15 @@ class AttnInputs(NamedTuple):
     """Everything the attention core needs besides x and params."""
 
     q_pos: jnp.ndarray                 # (B, T) absolute positions
-    cache_k: Optional[jnp.ndarray]     # (B, S, Hkv, D) or None
-    cache_v: Optional[jnp.ndarray]
+    cache_k: Optional[jnp.ndarray]     # (B, S, Hkv, D), pool (N, bs, Hkv, D)
+    cache_v: Optional[jnp.ndarray]     # when block_table is set, or None
     cache_len: Optional[jnp.ndarray]   # (B,) valid length
     tree_mask: Optional[jnp.ndarray]   # (T, T) ancestor-or-self bool
     window: jnp.ndarray | int          # 0 => full attention
     causal: bool
+    block_table: Optional[jnp.ndarray] = None   # (B, M) int32 => pool layout
+    paged_kernel: bool = True          # static: False forces the jnp
+    #                                    fallback (windowed groups)
 
 
 # ---------------------------------------------------------------------------
@@ -86,6 +98,9 @@ def gqa_fwd(p, cfg, x, ai: AttnInputs):
         kv_pos = ai.q_pos[0]  # assumes aligned positions across batch
         out = blocked_attention(q, k, v, ai.q_pos, kv_pos,
                                 window=ai.window, causal=ai.causal)
+    elif ai.block_table is not None:
+        # paged verify: scatter scratch through the table, stream the pool
+        out, k, v = _paged_verify_gqa(q, k, v, ai)
     else:
         # verify/decode path: write new kv into scratch region then attend
         S = ai.cache_k.shape[1]
@@ -98,6 +113,64 @@ def gqa_fwd(p, cfg, x, ai: AttnInputs):
         k, v = ck, cv  # return updated full cache
     out = out.reshape(B, T, cfg.n_heads_padded * hd)
     return out @ p["wo"], k, v
+
+
+# ---------------------------------------------------------------------------
+# paged (block-pool) verify path
+# ---------------------------------------------------------------------------
+
+
+def _paged_scatter(pool, new, cache_len, block_table):
+    """Write T per-token entries into the pool at the scratch region
+    ``[cache_len, cache_len + T)``, mapped through the block table.
+    pool: (N, bs, ...); new: (B, T, ...) -> updated pool.  Positions past
+    the table's reach clamp to the last logical slot (the engine
+    guarantees coverage for live rows; dead rows' tables are all-NULL, so
+    their writes land in the reserved garbage block)."""
+    bs = pool.shape[1]
+    M = block_table.shape[1]
+    T = new.shape[1]
+    logical = cache_len[:, None] + jnp.arange(T)[None, :]            # (B,T)
+    logical = jnp.minimum(logical, M * bs - 1)
+    phys = jnp.take_along_axis(block_table, logical // bs, axis=1)   # (B,T)
+    return pool.at[phys, logical % bs].set(new.astype(pool.dtype))
+
+
+def _paged_gather_layer(pool, table):
+    """One LAYER's logical view (B, M·bs, ...) plus the (B, M·bs) bool of
+    positions backed by a real (non-NULL) block — the per-layer fallback's
+    transient, and the only place the pool layout is re-flattened outside
+    the shim (serving/paged.py) and the deliberately independent test /
+    oracle copies."""
+    bs = pool.shape[1]
+    B, M = table.shape
+    view = pool[table].reshape(B, M * bs, *pool.shape[2:])
+    covered = jnp.repeat(table != 0, bs, axis=1)
+    return view, covered
+
+
+def _paged_verify_gqa(q, k, v, ai: AttnInputs):
+    """Pool-layout verify for GQA: persist the T new K/V through the block
+    table (token-granular scatter — the only writes of the step), then
+    attend with the native paged kernel.  Groups with sliding-window
+    layers (ai.paged_kernel False) take the jnp fallback: a per-layer
+    table gather feeding the same masked attention the dense path uses —
+    transient O(B·M·bs) for ONE layer, not the all-layer shim view."""
+    pool_k, pool_v, table = ai.cache_k, ai.cache_v, ai.block_table
+    B, T = q.shape[:2]
+    npk = _paged_scatter(pool_k, k, ai.cache_len, table)
+    npv = _paged_scatter(pool_v, v, ai.cache_len, table)
+    if ai.paged_kernel:
+        tm = (ai.tree_mask if ai.tree_mask is not None
+              else jnp.tril(jnp.ones((T, T), bool)))
+        out = tree_attention_paged_bshd(q, npk, npv, k, v, tm,
+                                        ai.cache_len, table)
+    else:
+        ck, covered = _paged_gather_layer(npk, table)
+        cv, _ = _paged_gather_layer(npv, table)
+        mask = _verify_mask(ai, B, T, ck.shape[1]) & covered[:, None, :]
+        out = masked_attention(q, ck, cv, mask)
+    return out, npk, npv
 
 
 def _verify_mask(ai: AttnInputs, B: int, T: int, S: int):
@@ -179,11 +252,26 @@ def mla_fwd(p, cfg, x, ai: AttnInputs):
         return out @ p["wo"], c_kv, k_rope
 
     # decode/verify: absorbed attention against the latent cache
-    S = ai.cache_k.shape[1]
-    slot = ai.cache_len[:, None] + jnp.arange(T)[None, :]
-    bidx = jnp.arange(B)[:, None]
-    ckv_all = ai.cache_k.at[bidx, slot].set(c_kv.astype(ai.cache_k.dtype))
-    krope_all = ai.cache_v.at[bidx, slot].set(k_rope.astype(ai.cache_v.dtype))
+    if ai.block_table is not None:
+        # paged fallback (DESIGN.md §6.6): absorbed MLA scores against the
+        # latent directly — no (Hkv, D)-shaped K/V for the paged kernel to
+        # stream — so gather THIS layer's latent view through the table
+        # (one-layer transient), after scattering the T new latents in.
+        table = ai.block_table
+        new_k = _paged_scatter(ai.cache_k, c_kv, ai.cache_len, table)
+        new_v = _paged_scatter(ai.cache_v, k_rope, ai.cache_len, table)
+        ckv_all, covered = _paged_gather_layer(new_k, table)
+        krope_all, _ = _paged_gather_layer(new_v, table)
+        mask = _verify_mask(ai, B, T, ckv_all.shape[1]) & covered[:, None, :]
+    else:
+        S = ai.cache_k.shape[1]
+        slot = ai.cache_len[:, None] + jnp.arange(T)[None, :]
+        bidx = jnp.arange(B)[:, None]
+        ckv_all = ai.cache_k.at[bidx, slot].set(c_kv.astype(ai.cache_k.dtype))
+        krope_all = ai.cache_v.at[bidx, slot].set(
+            k_rope.astype(ai.cache_v.dtype))
+        new_k, new_v = ckv_all, krope_all
+        mask = _verify_mask(ai, B, T, S)
 
     # absorbed: q' = q_nope @ W_uk^T per head -> score against latent directly
     w_uk = p["w_uk"].reshape(r, H, nd)
@@ -194,7 +282,6 @@ def mla_fwd(p, cfg, x, ai: AttnInputs):
     s = s + jnp.einsum("bthr,bsr->bths", q_rope.astype(jnp.float32),
                        krope_all.astype(jnp.float32))
     s = s * scale
-    mask = _verify_mask(ai, B, T, S)
     s = jnp.where(mask[:, :, None, :], s, -jnp.inf)
     pw = jax.nn.softmax(s, axis=-1)
     pw = jnp.where(jnp.isnan(pw), 0.0, pw)
@@ -202,4 +289,4 @@ def mla_fwd(p, cfg, x, ai: AttnInputs):
     w_uv = p["w_uv"].reshape(r, H, vd)
     out = jnp.einsum("bthr,rhv->bthv", o_lat, w_uv.astype(jnp.float32))
     out = out.reshape(B, T, H * vd).astype(x.dtype)
-    return out @ p["wo"], ckv_all, krope_all
+    return out @ p["wo"], new_k, new_v

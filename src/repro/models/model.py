@@ -215,13 +215,27 @@ def _window_array(cfg, n_layers, offset=0):
                       for i in range(n_layers)], jnp.int32)
 
 
+def paged_kernel_covers(cfg: ModelConfig, offset: int = 0,
+                        n: Optional[int] = None) -> bool:
+    """True when the native paged tree-attention kernel covers layers
+    ``[offset, offset + n)`` (default: the whole model) — i.e. none of
+    them takes the per-layer gather fallback.  MLA's absorbed-latent math
+    and sliding-window layers fall back.  THE single source of truth for
+    this dispatch: ``forward`` keys each scan group's path off it, and
+    the paged engine keys its transient-memory accounting off the
+    whole-model answer (serving/engine.py)."""
+    n = cfg.n_layers if n is None else n
+    return cfg.mla is None and all(
+        cfg.window_for_layer(offset + i) == 0 for i in range(n))
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
 
 
 def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
-            cache=None, cache_len=None, tree_mask=None,
+            cache=None, cache_len=None, tree_mask=None, block_table=None,
             want_logits: bool = True):
     """inputs: (B,T) int tokens, or (B,T,d) embeddings (audio frontend stub).
 
@@ -231,8 +245,17 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
     mode='verify': T speculative tokens against the populated cache;
                   `cache_len` (B,) is the committed length; `tree_mask`
                   (T,T) ancestor mask (None => chain / plain decode).
+                  `block_table` (B, M) int32 switches attention groups to
+                  the paged cache layout: their `cache` arrays are global
+                  block pools `(L, num_blocks, block_size, ...)` streamed
+                  through the table by the native paged tree-attention
+                  kernel (recurrent-state groups stay dense per-slot and
+                  ignore the table).  Verify-only: paged prefill goes
+                  through the per-slot join shim (serving/paged.py).
     """
     assert mode in ("full", "verify")
+    assert block_table is None or mode == "verify", \
+        "paged layout is a verify-path feature; prefill uses the join shim"
     B, T = inputs.shape[:2]
     if inputs.ndim == 2:
         h = params["embed"][inputs]
@@ -256,6 +279,12 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
         if kind.startswith("attn_stack"):
             moe_ffn = kind.endswith("moe")
             windows = _window_array(cfg, n, layer_offset)
+            # static dispatch: the paged Pallas kernel covers full-attention
+            # GQA groups; windowed groups take the per-layer jnp fallback
+            # (window is a traced scan operand, so this must be decided per
+            # GROUP at trace time, and a group mixing local+global layers —
+            # e.g. gemma3's 5:1 pattern — falls back as a whole).
+            pk_ok = paged_kernel_covers(cfg, layer_offset, n)
 
             def body(carry, xs):
                 h, aux = carry
@@ -263,7 +292,9 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
                 ai = AttnInputs(
                     q_pos=positions, cache_k=ck, cache_v=cv,
                     cache_len=cache_len if is_verify else None,
-                    tree_mask=tree_mask, window=win, causal=causal)
+                    tree_mask=tree_mask, window=win, causal=causal,
+                    block_table=block_table if is_verify else None,
+                    paged_kernel=pk_ok)
                 h, nk, nv, aux_l = _attn_layer_fwd(lp, cfg, h, ai, moe_ffn)
                 return (h, aux + aux_l), (nk, nv)
 
@@ -310,7 +341,8 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
             if is_verify:
                 ai = AttnInputs(q_pos=positions, cache_k=gc["k"][0],
                                 cache_v=gc["v"][0], cache_len=cache_len,
-                                tree_mask=tree_mask, window=win, causal=True)
+                                tree_mask=tree_mask, window=win, causal=True,
+                                block_table=block_table)
                 h, nk, nv, _ = _attn_layer_fwd(sp, cfg, h, ai, moe_ffn=False)
                 new_cache.append({"k": nk[None], "v": nv[None]})
             else:

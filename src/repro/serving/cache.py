@@ -12,12 +12,13 @@ After a verify forward pass the per-group caches hold *candidates*:
 Both rules are pure gathers — no recompute — which is what makes chain
 speculation on SSM/hybrid architectures cheap (DESIGN.md §4).
 
-Commit always runs in LOGICAL cache coordinates: each attention array is
-the (B, S) per-slot view.  With the dense engine that view IS the
-persistent cache; with the paged engine (serving/paged.py, DESIGN.md §6)
-it is gathered from the global block pool through per-slot block tables
-before the step and scattered back after, so the compaction writes below
-land in slot-owned scratch blocks without commit knowing about paging.
+Commit addresses the cache in LOGICAL coordinates either way.  Dense
+(``block_table`` None): each attention array is the per-slot (B, S) view
+and compaction indexes it directly.  Paged: each attention array is the
+global block pool ``(L, num_blocks, block_size, ...)`` and the (B, M)
+block table translates the same logical src/dst positions to (physical
+block, offset) pairs — a token-granular gather/scatter inside slot-owned
+scratch blocks, O(B·D1) touched entries, no dense view in between.
 """
 from __future__ import annotations
 
@@ -26,18 +27,34 @@ import jax.numpy as jnp
 ATTN_KEYS = {"k", "v"}
 
 
-def _commit_attn(arr, cache_len, path_nodes, *, has_layer_axis: bool):
-    """arr: (L,B,S,...) or (B,S,...). Gather accepted tree slots to the
-    front of the scratch region."""
+def _commit_attn(arr, cache_len, path_nodes, *, has_layer_axis: bool,
+                 block_table=None):
+    """Gather accepted tree slots to the front of the scratch region.
+    arr: dense (L,B,S,...) / (B,S,...), or — with ``block_table`` — the
+    pool (L,N,bs,...) / (N,bs,...)."""
     if not has_layer_axis:
         arr = arr[None]
-    L, B, S = arr.shape[:3]
     D1 = path_nodes.shape[1]
-    bidx = jnp.arange(B)[:, None]                          # (B,1)
-    src = jnp.minimum(cache_len[:, None] + path_nodes, S - 1)   # (B,D1)
-    dst = jnp.minimum(cache_len[:, None] + jnp.arange(D1)[None, :], S - 1)
-    vals = arr[:, bidx, src]                               # (L,B,D1,...)
-    out = arr.at[:, bidx, dst].set(vals)
+    if block_table is None:
+        L, B, S = arr.shape[:3]
+        bidx = jnp.arange(B)[:, None]                      # (B,1)
+        src = jnp.minimum(cache_len[:, None] + path_nodes, S - 1)   # (B,D1)
+        dst = jnp.minimum(cache_len[:, None] + jnp.arange(D1)[None, :], S - 1)
+        vals = arr[:, bidx, src]                           # (L,B,D1,...)
+        out = arr.at[:, bidx, dst].set(vals)
+    else:
+        bs = arr.shape[2]
+        M = block_table.shape[1]
+        cap = M * bs
+        src = jnp.minimum(cache_len[:, None] + path_nodes, cap - 1)
+        dst = jnp.minimum(cache_len[:, None] + jnp.arange(D1)[None, :],
+                          cap - 1)
+        sblk = jnp.take_along_axis(block_table, src // bs, axis=1)  # (B,D1)
+        dblk = jnp.take_along_axis(block_table, dst // bs, axis=1)
+        vals = arr[:, sblk, src % bs]                      # (L,B,D1,...)
+        # released rows hold all-NULL tables: their writes collide inside
+        # the shared garbage block, which is never read unmasked
+        out = arr.at[:, dblk, dst % bs].set(vals)
     return out if has_layer_axis else out[0]
 
 
@@ -49,16 +66,15 @@ def _commit_state(arr, last_node):
 
 
 def commit_cache(candidates, cache_len, path_nodes, n_accept, *,
-                 active=None, prev=None):
+                 active=None, prev=None, block_table=None):
     """candidates: cache pytree from a verify forward. Returns the committed
     cache (same structure as the pre-verify committed cache).
 
-    Attention compaction is block-table-agnostic: it gathers accepted
-    scratch entries [len+path] to [len, len+n_accept+1) *within the
-    logical view* it is handed.  Under the paged engine that view was
-    gathered from pool blocks and the writes scatter back into the slot's
-    own scratch blocks afterwards; under the dense engine the view is the
-    cache itself.  Either way nothing below ``cache_len`` is touched.
+    Attention compaction gathers accepted scratch entries [len+path] to
+    [len, len+n_accept+1) in logical coordinates; with ``block_table``
+    set the arrays are block pools and both sides of the move are
+    translated through the table (see ``_commit_attn``).  Either way
+    nothing below ``cache_len`` is touched.
 
     ``active`` (B,) bool + ``prev`` (pre-verify committed cache) support
     continuous batching: rows with ``active=False`` must come out of the
@@ -76,7 +92,8 @@ def commit_cache(candidates, cache_len, path_nodes, n_accept, *,
         for key, arr in group.items():
             if key in ATTN_KEYS:
                 g[key] = _commit_attn(arr, cache_len, path_nodes,
-                                      has_layer_axis=True)
+                                      has_layer_axis=True,
+                                      block_table=block_table)
             else:
                 new = _commit_state(arr, last_node)
                 if active is not None:
@@ -90,13 +107,16 @@ def commit_cache(candidates, cache_len, path_nodes, n_accept, *,
     return out
 
 
-def commit_prefix_cache(k, v, cache_len, path_nodes):
+def commit_prefix_cache(k, v, cache_len, path_nodes, *, block_table=None):
     """PrefixAttention cache: accepted hiddens were processed as a CHAIN in
     path order, so entry j in the scratch region corresponds to path step j
-    — compaction is the identity gather with arange."""
+    — compaction is the identity gather with arange.  ``block_table``: the
+    prefix cache rides the same per-slot tables as the KV pools."""
     D1 = path_nodes.shape[1]
-    ar = jnp.broadcast_to(jnp.arange(D1)[None, :],
-                          (k.shape[0], D1))
-    nk = _commit_attn(k, cache_len, ar, has_layer_axis=False)
-    nv = _commit_attn(v, cache_len, ar, has_layer_axis=False)
+    B = cache_len.shape[0]
+    ar = jnp.broadcast_to(jnp.arange(D1)[None, :], (B, D1))
+    nk = _commit_attn(k, cache_len, ar, has_layer_axis=False,
+                      block_table=block_table)
+    nv = _commit_attn(v, cache_len, ar, has_layer_axis=False,
+                      block_table=block_table)
     return nk, nv

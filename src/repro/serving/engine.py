@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models.model import paged_kernel_covers
 from repro.core.speculative import (autoregressive_step, init_decode_state,
                                     init_pool_state, join_slot,
                                     spec_decode_step)
@@ -112,6 +113,16 @@ class EngineStats:
     peak_blocks_in_use        high-water mark of allocated blocks
     preemptions               slots evicted to the queue on pool
                               exhaustion (re-prefilled later)
+    step_transient_tokens     cache positions each jitted step materializes
+                              as a transient on top of the persistent
+                              reservation: 0 for dense (in-place updates);
+                              ``max_batch × T`` scratch writes for the
+                              native paged kernel; ``max_batch × max_len``
+                              when any layer takes the per-LAYER gather
+                              fallback (sliding-window groups, MLA) — one
+                              layer's view at a time — and for the shim
+                              oracle, whose view additionally spans all L
+                              layers at once (same positions, L× bytes)
     """
 
     steps: int = 0
@@ -128,6 +139,7 @@ class EngineStats:
     dense_equiv_tokens: int = 0
     peak_blocks_in_use: int = 0
     preemptions: int = 0
+    step_transient_tokens: int = 0
 
     @property
     def tokens_per_step(self) -> float:
@@ -435,15 +447,28 @@ class PagedSpeculativeEngine(SpeculativeEngine):
     up front), which guarantees a lone slot can always grow — preemption
     therefore always makes progress.  Recurrent-state groups stay dense
     per-slot (O(1) each, nothing to page).
+
+    ``paged_attention="native"`` (default) runs the step's verify
+    attention with the block-table-aware ``tree_attention_paged`` Pallas
+    kernel and commits through the table — per-step transient memory is
+    O(max_batch × T), not the dense view.  ``"shim"`` restores the old
+    gather/scatter data path (parity oracle / triage only).
     """
 
     def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 **kw):
+                 paged_attention: str = "native", **kw):
         super().__init__(params, draft_params, cfg, tree, **kw)
         self.block_size = int(block_size)
         self.blocks_per_slot = -(-self.max_len // self.block_size)   # M
         self.num_blocks = num_blocks   # None => dense-equivalent, see serve
+        if paged_attention not in ("native", "shim"):
+            raise ValueError(f"paged_attention must be 'native' or 'shim': "
+                             f"{paged_attention}")
+        # "native": stream pool blocks through the tree_attention_paged
+        # kernel (the serving path).  "shim": gather/scatter the dense view
+        # around the unmodified dense step — parity oracle / triage only.
+        self.paged_attention = paged_attention
         greedy = self.criterion == "greedy"
         cfg_, tree_ = self.cfg, self.tree
         if self.use_speculative:
@@ -451,12 +476,13 @@ class PagedSpeculativeEngine(SpeculativeEngine):
                 lambda p, dp, st, tbl, act: paged_spec_decode_step(
                     p, dp, cfg_, tree_, st, tbl, criterion=self.criterion,
                     temperature=self.temperature, epsilon=self.epsilon,
-                    active=act))
+                    active=act, attention=paged_attention))
         else:
             self._step = jax.jit(
                 lambda p, _dp, st, tbl, act: paged_autoregressive_step(
                     p, cfg_, st, tbl, greedy=greedy,
-                    temperature=self.temperature, active=act))
+                    temperature=self.temperature, active=act,
+                    attention=paged_attention))
         self._join_fn = jax.jit(
             lambda p, dp, st, prompt, rl, slot, row: paged_join_slot(
                 p, dp, cfg_, st, prompt, rl, slot, row, greedy=greedy))
@@ -522,6 +548,14 @@ class PagedSpeculativeEngine(SpeculativeEngine):
         st.num_blocks = nb
         st.pool_tokens = (nb - 1) * self.block_size
         st.dense_equiv_tokens = max_batch * self.max_len
+        # windowed groups and MLA take the per-layer gather fallback even
+        # under "native" (models/model.py dispatch): their transient is one
+        # layer's logical view, not just the scratch writes — report it
+        st.step_transient_tokens = max_batch * (
+            self._scratch
+            if self.paged_attention == "native"
+            and paged_kernel_covers(self.cfg)
+            else self.blocks_per_slot * self.block_size)
         return init_paged_state(self.params, self.draft_params, self.cfg,
                                 max_batch, nb, self.block_size, rng)
 

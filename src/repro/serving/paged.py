@@ -14,19 +14,27 @@ its request uses it or not.  Paging replaces the per-slot stripes with
     scratch region ``[len, len + T)`` (see DESIGN.md §6).
 
 Physical block 0 is the reserved **NULL block**: every unallocated table
-entry points at it.  It accumulates garbage writes (inactive rows' scratch,
-scatter-back of uncovered view regions) and is never read at an unmasked
-position — the verify mask only admits positions ``< cache_len`` or inside
-the tree scratch ``[len, len + T)``, both of which the allocator keeps
-covered by real, slot-owned blocks.
+entry points at it.  It accumulates garbage writes (inactive rows'
+scratch) and is never read at an unmasked position — the verify mask only
+admits positions ``< cache_len`` or inside the tree scratch
+``[len, len + T)``, both of which the allocator keeps covered by real,
+slot-owned blocks, and the native kernel additionally compute-skips any
+NULL table entry outright.
 
-Execution is a **paged-read/write shim** in front of the existing step:
-``gather_view`` assembles the per-slot dense view ``(L, B, M·bs, ...)``
-from the pool via the block table (the same operand a native paged
-attention kernel would stream block-by-block), the unmodified
-``spec_decode_step`` / ``join_slot`` run on that view, and
-``scatter_view`` writes the view back into the pool blocks.  Persistent
-state is paged; the view is a transient of the jitted step.
+**Steady-state execution is native** (``attention="native"``, the
+default): ``paged_spec_decode_step`` hands the pools and the block table
+straight to ``spec_decode_step``, whose verify forward streams K/V blocks
+from the pool with the ``tree_attention_paged`` Pallas kernel and whose
+commit compacts accepted entries through the table
+(``serving/cache.py``).  The step's transient footprint is O(B·T) scratch
+writes plus the blocks actually streamed — never the dense
+``(L, B, M·bs, ...)`` view.
+
+The **gather/scatter shim** (``gather_view`` assembles the dense per-slot
+view, the unmodified dense step runs on it, ``scatter_view`` writes it
+back) survives in two roles only: the parity oracle for tests/benchmarks
+(``attention="shim"``), and the per-slot strip that ``paged_join_slot``
+gathers for prefill — join is per-request and off the steady-state path.
 
 Only attention-shaped caches are paged: the ``'k'``/``'v'`` keys of
 attn/shared-attn/MLA groups and the Hydra++ PrefixAttention cache, i.e.
@@ -35,13 +43,15 @@ everything with a ``max_len`` sequence axis.  Recurrent-state groups
 O(1) per slot — there is nothing to page — and stay dense per-slot arrays
 inside ``PagedState.pools`` (the documented asymmetry, DESIGN.md §6.5).
 
-The host-side ``BlockAllocator`` (free-list; alloc/free in O(n_blocks))
-lives here too; the serving policy around it — allocation on join, growth
-before every step, release on finish, preemption-to-queue on exhaustion —
-is ``serving/engine.py::PagedSpeculativeEngine``.
+The host-side ``BlockAllocator`` (heap-ordered free pool, O(log n) per
+block, ascending-id handout) lives here too; the serving policy around it
+— allocation on join, growth before every step, release on finish,
+preemption-to-queue on exhaustion — is
+``serving/engine.py::PagedSpeculativeEngine``.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Any, List, NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -63,13 +73,19 @@ NULL_BLOCK = 0
 
 
 class BlockAllocator:
-    """Free-list allocator over the global block pool (host side, eager).
+    """Allocator over the global block pool (host side, eager).
 
     Block ids are ``[1, num_blocks)`` — physical block 0 is the reserved
     NULL block and is never handed out.  ``alloc`` is all-or-nothing: a
     request for more blocks than are free returns ``None`` and changes
     nothing, which is what lets the engine turn exhaustion into queueing /
     preemption instead of a crash.
+
+    The free pool is a min-heap mirrored by a membership set: ``free`` is
+    O(log n) per block and raises ``ValueError`` on a double/foreign free
+    (a real exception — the old bare ``assert`` vanished under ``-O``),
+    and ``alloc`` hands out the lowest free ids first, which keeps block
+    placement deterministic for the byte-match tests.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -77,8 +93,8 @@ class BlockAllocator:
             raise ValueError("need >= 2 blocks (one is the reserved NULL)")
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
-        # pop() from the tail hands out ascending ids 1, 2, ...
-        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        # ascending list == valid min-heap; heappop hands out 1, 2, ...
+        self._free_heap: List[int] = list(range(1, num_blocks))
         self._allocated: set = set()
         self.peak_in_use = 0
 
@@ -89,7 +105,7 @@ class BlockAllocator:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        return len(self._free_heap)
 
     @property
     def blocks_in_use(self) -> int:
@@ -100,22 +116,23 @@ class BlockAllocator:
         return -(-int(n_tokens) // self.block_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        if n > len(self._free):
+        if n > len(self._free_heap):
             return None
-        got = [self._free.pop() for _ in range(n)]
+        got = [heapq.heappop(self._free_heap) for _ in range(n)]
         self._allocated.update(got)
         self.peak_in_use = max(self.peak_in_use, len(self._allocated))
         return got
 
     def free(self, blocks: List[int]) -> None:
         for b in blocks:
-            assert b in self._allocated, f"double/foreign free of block {b}"
+            if b not in self._allocated:
+                raise ValueError(f"double/foreign free of block {b}")
             self._allocated.discard(b)
-            self._free.append(b)
+            heapq.heappush(self._free_heap, b)
 
 
 # ---------------------------------------------------------------------------
-# device-side pool state + gather/scatter shim
+# device-side pool state + gather/scatter shim (fallback / oracle only)
 # ---------------------------------------------------------------------------
 
 
@@ -181,8 +198,11 @@ def _scatter_attn(pool, view, table):
 
 
 def gather_view(pstate: PagedState, table) -> DecodeState:
-    """Assemble the dense per-slot DecodeState view the existing step
-    functions consume.  ``table``: (B, M) int32 physical block ids."""
+    """Assemble the dense per-slot DecodeState view the DENSE step
+    functions consume.  ``table``: (B, M) int32 physical block ids.
+
+    Off the steady-state path since the native kernel landed: used only
+    by the ``attention="shim"`` oracle and (per-slot) by join."""
     cache = [{k: (_gather_attn(a, table) if k in ATTN_KEYS else a)
               for k, a in g.items()} for g in pstate.pools]
     pk = pv = None
@@ -216,30 +236,72 @@ def scatter_view(pstate: PagedState, view: DecodeState, table) -> PagedState:
 # ---------------------------------------------------------------------------
 
 
+def _pools_as_state(pstate: PagedState) -> DecodeState:
+    """Zero-copy relabel: the pools ARE the step state in the native path
+    (spec_decode_step reads the layout off the block table's presence)."""
+    return DecodeState(cache=pstate.pools, cache_len=pstate.cache_len,
+                       last_token=pstate.last_token,
+                       last_hidden=pstate.last_hidden,
+                       prefix_k=pstate.prefix_k, prefix_v=pstate.prefix_v,
+                       rng=pstate.rng)
+
+
+def _state_as_pools(state: DecodeState) -> PagedState:
+    return PagedState(pools=state.cache, prefix_k=state.prefix_k,
+                      prefix_v=state.prefix_v, cache_len=state.cache_len,
+                      last_token=state.last_token,
+                      last_hidden=state.last_hidden, rng=state.rng)
+
+
 def paged_spec_decode_step(params, draft_params, cfg: ModelConfig, tree,
                            pstate: PagedState, table, *,
                            criterion: str = "greedy", temperature: float = 0.7,
                            epsilon: float = 0.15,
-                           active: Optional[jnp.ndarray] = None) -> StepResult:
-    """gather -> unmodified spec_decode_step -> scatter."""
-    view = gather_view(pstate, table)
-    res = spec_decode_step(params, draft_params, cfg, tree, view,
-                           criterion=criterion, temperature=temperature,
-                           epsilon=epsilon, active=active)
-    return StepResult(scatter_view(pstate, res.state, table),
-                      res.emitted, res.n_emitted)
+                           active: Optional[jnp.ndarray] = None,
+                           attention: str = "native") -> StepResult:
+    """One speculative step over the paged pools.
+
+    ``attention="native"`` (default): the block table rides into
+    ``spec_decode_step`` and the verify forward streams pool blocks with
+    the ``tree_attention_paged`` kernel — no dense view is ever built.
+    ``attention="shim"``: gather -> unmodified dense step -> scatter; kept
+    as the parity oracle and for triage, NOT a serving path.
+    """
+    if attention == "shim":
+        view = gather_view(pstate, table)
+        res = spec_decode_step(params, draft_params, cfg, tree, view,
+                               criterion=criterion, temperature=temperature,
+                               epsilon=epsilon, active=active)
+        return StepResult(scatter_view(pstate, res.state, table),
+                          res.emitted, res.n_emitted)
+    if attention != "native":
+        raise ValueError(f"attention must be 'native' or 'shim': {attention}")
+    res = spec_decode_step(params, draft_params, cfg, tree,
+                           _pools_as_state(pstate), criterion=criterion,
+                           temperature=temperature, epsilon=epsilon,
+                           active=active, block_table=table)
+    return StepResult(_state_as_pools(res.state), res.emitted, res.n_emitted)
 
 
 def paged_autoregressive_step(params, cfg: ModelConfig, pstate: PagedState,
                               table, *, greedy: bool = True,
                               temperature: float = 1.0,
-                              active: Optional[jnp.ndarray] = None
-                              ) -> StepResult:
-    view = gather_view(pstate, table)
-    res = autoregressive_step(params, cfg, view, greedy=greedy,
-                              temperature=temperature, active=active)
-    return StepResult(scatter_view(pstate, res.state, table),
-                      res.emitted, res.n_emitted)
+                              active: Optional[jnp.ndarray] = None,
+                              attention: str = "native") -> StepResult:
+    """T=1 baseline step over the paged pools (same dispatch as
+    ``paged_spec_decode_step``)."""
+    if attention == "shim":
+        view = gather_view(pstate, table)
+        res = autoregressive_step(params, cfg, view, greedy=greedy,
+                                  temperature=temperature, active=active)
+        return StepResult(scatter_view(pstate, res.state, table),
+                          res.emitted, res.n_emitted)
+    if attention != "native":
+        raise ValueError(f"attention must be 'native' or 'shim': {attention}")
+    res = autoregressive_step(params, cfg, _pools_as_state(pstate),
+                              greedy=greedy, temperature=temperature,
+                              active=active, block_table=table)
+    return StepResult(_state_as_pools(res.state), res.emitted, res.n_emitted)
 
 
 def paged_join_slot(params, draft_params, cfg: ModelConfig,

@@ -62,11 +62,15 @@ def test_allocator_exhaustion_is_all_or_nothing():
 
 
 def test_allocator_rejects_double_free():
+    """A double/foreign free must raise a REAL exception — the old bare
+    ``assert`` disappeared under ``python -O``."""
     a = BlockAllocator(num_blocks=4, block_size=BS)
     got = a.alloc(2)
     a.free(got)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="free"):
         a.free(got)
+    with pytest.raises(ValueError, match="free"):
+        a.free([3])                          # foreign: never handed out
 
 
 def test_allocator_blocks_for():
