@@ -20,6 +20,19 @@ DESIGN.md §6.6) the paged engine's transient is just the
 dense-view transient (``max_batch × max_len``, visible by rerunning with
 ``paged_attention="shim"``) is gone, so peak step memory really is
 pool + O(B·T), i.e. 0.25x dense end to end at ``POOL_FRAC=0.25``.
+
+Host-overlap rows (DESIGN.md §7): the ``cont``/``paged`` rows run the
+default async double-buffered loop (``inflight=2``: step k+1 dispatched
+before step k's emissions are read), the ``cont_sync``/``paged_sync``
+rows pin ``inflight=1`` so the ``host_stall_ms``/``stall_frac`` columns
+isolate what the overlap buys on the identical stream — the async rows
+show host-stall (device starvation by host bookkeeping) collapsing to
+~0 at equal tok/s.  Caveat for few-core CPU runners: the "device" here
+shares the host's cores, so the overlap can't raise throughput the way
+it does on a real accelerator (XLA already saturates the cores, and the
+deferred read pays a small wakeup penalty) — the load-bearing column on
+CPU is ``host_stall_ms``, which is what transfers to hardware where
+device steps run beside the host.
 """
 from __future__ import annotations
 
@@ -42,9 +55,15 @@ def paged_kwargs(max_batch: int) -> dict:
     return {"block_size": BLOCK_SIZE, "num_blocks": usable + 1}
 
 
+def paged_sync_kwargs(max_batch: int) -> dict:
+    return {**paged_kwargs(max_batch), "inflight": 1}
+
+
 ENGINES = (("cont", SpeculativeEngine, lambda B: {}),
+           ("cont_sync", SpeculativeEngine, lambda B: {"inflight": 1}),
            ("buck", BucketedEngine, lambda B: {}),
-           ("paged", PagedSpeculativeEngine, paged_kwargs))
+           ("paged", PagedSpeculativeEngine, paged_kwargs),
+           ("paged_sync", PagedSpeculativeEngine, paged_sync_kwargs))
 
 
 def run(batch_sizes=(1, 2, 4, 8), max_new_tokens: int = 32,

@@ -122,6 +122,12 @@ def tree_attention_paged_sweep(*, B=2, Hq=4, Hkv=2, D=64, T=16,
                 "shim_transient_bytes": B * M * bs * kv_elem,
                 "paged_transient_bytes": (blocks_touched * bs + B * T)
                 * kv_elem,
+                # the engine-level transient model the same geometry
+                # yields (EngineStats.step_transient_tokens): native
+                # streams scratch only, shim/fallback a dense view —
+                # deterministic, so the CI regression gate pins it exactly
+                "step_transient_tokens_native": B * T,
+                "step_transient_tokens_shim": B * M * bs,
             })
     return out
 

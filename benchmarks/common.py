@@ -20,6 +20,13 @@ import os
 import time
 from functools import lru_cache
 
+# The serving benchmarks measure host/device overlap, which the legacy
+# CPU runtime's serialized pipelined dispatch would invert — opt into the
+# thunk runtime before the backend initializes (see runtime_env).
+from repro.runtime_env import enable_cpu_thunk_runtime
+
+enable_cpu_thunk_runtime()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -156,12 +163,26 @@ def serve_derived(stats) -> str:
     the positions one jitted step materializes ON TOP of the reservation
     (0 dense in-place; max_batch x T for the native paged kernel;
     max_batch x max_len when any layer takes the per-layer gather
-    fallback — windowed groups, MLA — or under the shim oracle)."""
+    fallback — windowed groups, MLA — or under the shim oracle).
+
+    Host-overlap columns (the async serve loop, DESIGN.md §7):
+    `host_stall_ms` is the wall time host bookkeeping STARVED the device
+    pipeline (host working with no step in flight — the serialization
+    double-buffering removes; ~0 for async rows, one harvest+join+
+    dispatch interval per step for sync rows), `stall_frac` that as a
+    fraction of serving wall-clock, `read_wait_ms` the separate
+    device-bound time spent blocked inside device-to-host reads, and
+    `inflight_peak` the deepest dispatched-unharvested window the loop
+    reached (1 = synchronous, 2 = double-buffered)."""
     row = (f"tok_per_s={stats.tokens_per_s:.2f};"
            f"tok_per_step={stats.tokens_per_step:.3f};"
            f"slot_util={stats.slot_utilization:.3f};"
            f"mean_lat_ms={stats.mean_latency_s * 1e3:.1f};"
-           f"p99_lat_ms={stats.p99_latency_s * 1e3:.1f}")
+           f"p99_lat_ms={stats.p99_latency_s * 1e3:.1f};"
+           f"host_stall_ms={stats.host_stall_s * 1e3:.1f};"
+           f"stall_frac={stats.host_stall_frac:.3f};"
+           f"read_wait_ms={stats.read_wait_s * 1e3:.1f};"
+           f"inflight_peak={stats.steps_in_flight}")
     if stats.pool_tokens:                    # paged engine: memory columns
         row += (f";kv_reserved_tok={stats.pool_tokens}"
                 f";kv_peak_tok={stats.peak_pool_tokens}"

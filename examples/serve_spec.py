@@ -66,7 +66,8 @@ def main() -> None:
                   f"tok/step={stats.tokens_per_step:5.2f} "
                   f"tok/s={stats.tokens_per_s:7.1f} "
                   f"util={stats.slot_utilization:.3f} "
-                  f"mean_lat={stats.mean_latency_s * 1e3:7.1f}ms{mem}")
+                  f"mean_lat={stats.mean_latency_s * 1e3:7.1f}ms "
+                  f"host_stall={stats.host_stall_s * 1e3:6.1f}ms{mem}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""Benchmark regression gate for the kernel micro-benchmarks.
+
+CI's push job runs ``benchmarks.bench_kernels`` (fresh
+``results/bench_kernels.json``), then this script against the committed
+``results/bench_kernels.baseline.json``.  Nonzero exit — failing the
+job — when:
+
+  * a **deterministic memory-model column** grew: ``paged_transient_bytes``
+    / ``shim_transient_bytes`` / ``allocated_blocks`` and the engine-level
+    ``step_transient_tokens_*`` model.  These are arithmetic over the
+    cache geometry, not timings, so ANY increase means the transient
+    memory story regressed (e.g. a kernel change quietly rebuilding the
+    dense view);
+  * a **kernel timing** (``dense_us``/``shim_us``/``paged_us`` per sweep
+    entry, or a ``kernel_*`` CSV row's us_per_call) exceeds
+    ``baseline × tol``.  ``tol`` defaults to ``REPRO_BENCH_TOL`` or 3.0 —
+    deliberately generous: shared CI runners are noisy, and the gate is
+    for order-of-magnitude rot (an accidental de-vectorization, a python
+    loop on the hot path), not 10% jitter;
+  * **parity drifted**: ``paged_vs_dense_max_err`` above an absolute
+    ceiling (1e-3) — the paged kernel no longer computes the dense answer;
+  * a baseline sweep entry or kernel row **disappeared** — coverage must
+    never shrink silently.
+
+Refresh the baseline after an intentional change with ``--update-baseline``
+(or copy the fresh JSON over it) and commit the result.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+TIMING_KEYS = ("dense_us", "shim_us", "paged_us")
+EXACT_KEYS = ("allocated_blocks", "shim_transient_bytes",
+              "paged_transient_bytes", "step_transient_tokens_native",
+              "step_transient_tokens_shim")
+MAX_ERR_CEILING = 1e-3
+DEFAULT_TOL = float(os.environ.get("REPRO_BENCH_TOL", "3.0"))
+
+
+def _sweep_key(entry: dict) -> tuple:
+    """Identity of one sweep cell (geometry, not results)."""
+    return (entry.get("B"), entry.get("block_size"), entry.get("occupancy"))
+
+
+def _csv_timings(doc: dict) -> dict:
+    """{row name: us_per_call} from the JSON's csv_rows strings."""
+    out = {}
+    for row in doc.get("csv_rows", []):
+        parts = row.split(",", 2)
+        if len(parts) >= 2:
+            try:
+                out[parts[0]] = float(parts[1])
+            except ValueError:
+                pass
+    return out
+
+
+def compare(fresh: dict, baseline: dict, tol: float = DEFAULT_TOL) -> list:
+    """Returns the list of violations (empty = gate passes)."""
+    bad = []
+    fresh_sweep = {_sweep_key(e): e
+                   for e in fresh.get("tree_attention_paged_sweep", [])}
+    for key, base in ((_sweep_key(e), e)
+                      for e in baseline.get("tree_attention_paged_sweep", [])):
+        cur = fresh_sweep.get(key)
+        tag = f"sweep[B={key[0]},bs={key[1]},occ={key[2]}]"
+        if cur is None:
+            bad.append(f"{tag}: entry missing from fresh results "
+                       f"(benchmark coverage shrank)")
+            continue
+        for k in EXACT_KEYS + TIMING_KEYS:
+            if k in base and k not in cur:
+                bad.append(f"{tag}.{k}: column missing from fresh results "
+                           f"(a gated metric is no longer measured)")
+        for k in EXACT_KEYS:
+            if k in base and k in cur and cur[k] > base[k]:
+                bad.append(f"{tag}.{k}: {cur[k]} > baseline {base[k]} "
+                           f"(deterministic memory model regressed)")
+        for k in TIMING_KEYS:
+            if k in base and base[k] > 0 and cur.get(k, 0.0) > base[k] * tol:
+                bad.append(f"{tag}.{k}: {cur[k]:.1f}us > baseline "
+                           f"{base[k]:.1f}us x tol {tol:g}")
+        err = cur.get("paged_vs_dense_max_err", 0.0)
+        if err > MAX_ERR_CEILING:
+            bad.append(f"{tag}.paged_vs_dense_max_err: {err:.2e} > "
+                       f"{MAX_ERR_CEILING:g} (paged/dense parity broken)")
+
+    fresh_rows = _csv_timings(fresh)
+    for name, base_us in _csv_timings(baseline).items():
+        cur_us = fresh_rows.get(name)
+        if cur_us is None:
+            bad.append(f"csv[{name}]: row missing from fresh results")
+        elif base_us > 0 and cur_us > base_us * tol:
+            bad.append(f"csv[{name}]: {cur_us:.1f}us > baseline "
+                       f"{base_us:.1f}us x tol {tol:g}")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when bench_kernels results regress vs baseline.")
+    ap.add_argument("fresh", help="fresh results/bench_kernels.json")
+    ap.add_argument("baseline",
+                    help="committed results/bench_kernels.baseline.json")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="timing tolerance factor vs baseline "
+                         "(env REPRO_BENCH_TOL, default %(default)s)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy fresh over baseline instead of comparing "
+                         "(after an intentional perf/memory change)")
+    args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"[bench-gate] baseline updated from {args.fresh}")
+        return 0
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    bad = compare(fresh, baseline, args.tol)
+    if bad:
+        print(f"[bench-gate] FAIL — {len(bad)} regression(s) vs "
+              f"{args.baseline} (tol {args.tol:g}):")
+        for b in bad:
+            print(f"  - {b}")
+        return 1
+    print(f"[bench-gate] OK — {args.fresh} within tol {args.tol:g} of "
+          f"{args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

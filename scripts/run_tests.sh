@@ -4,8 +4,23 @@
 # through, e.g. `scripts/run_tests.sh tests/test_engine_continuous.py -x`.
 # The full (slow-inclusive) tier-1 command stays:
 #   PYTHONPATH=src python -m pytest -x -q
-set -euo pipefail
+set -uo pipefail
 cd "$(dirname "$0")/.."
 export JAX_PLATFORMS=cpu
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q -m "not slow" "$@"
+
+out=$(mktemp)
+trap 'rm -f "$out"' EXIT
+python -m pytest -q -m "not slow" "$@" | tee "$out"
+code=${PIPESTATUS[0]}
+
+# surface what the deselect skipped, parsed from pytest's own summary
+# (the only deselector here is the `slow` marker), so CI logs are
+# explicit about coverage without paying a second collection pass
+n_slow=$(grep -oE '[0-9]+ deselected' "$out" | tail -1 | cut -d' ' -f1)
+echo "[run_tests] deselected ${n_slow:-0} slow-marked test(s)" \
+     "(run them with: PYTHONPATH=src python -m pytest -q -m slow)"
+
+# propagate pytest's exit code explicitly (CI must fail when tests do,
+# not rely on the shell's last-command default)
+exit "$code"

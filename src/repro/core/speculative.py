@@ -42,6 +42,15 @@ class StepResult(NamedTuple):
     n_emitted: jnp.ndarray          # (B,) = n_accept + 1 (incl. bonus)
 
 
+def max_emitted_per_step(tree, *, speculative: bool = True) -> int:
+    """Most tokens one decode step can commit to a row: the deepest
+    root-to-leaf path fully accepted, plus the bonus token.  The async
+    serving loop (DESIGN.md §7) uses this as its per-step staleness
+    bound — a dispatched-but-unharvested step advances ``cache_len`` by
+    at most this many positions."""
+    return (tree.max_depth + 1) if speculative else 1
+
+
 # ---------------------------------------------------------------------------
 # prefill
 # ---------------------------------------------------------------------------
@@ -112,6 +121,14 @@ def join_slot(params, draft_params, cfg: ModelConfig, state: DecodeState,
     one join per bucket.  NOTE: architectures with recurrent state groups
     (mamba/rwkv) must be called with real_len == P — a recurrent state
     scanned over pad tokens is corrupted, there is nothing to mask.
+
+    Async contract (DESIGN.md §7): this function performs no host reads —
+    the first sampled token is *installed* in ``last_token[slot]`` rather
+    than returned as a Python int, so the engine can dispatch a join into
+    the device lane behind an in-flight decode step and read the token
+    back one step later (``_harvest``) without flushing the pipeline.
+    Under greedy decoding the sample consumes no randomness, which is why
+    host-side scheduling order can never perturb the token stream.
     """
     P = prompt.shape[0]
     pos = jnp.arange(P)[None, :]

@@ -9,6 +9,13 @@ from __future__ import annotations
 import argparse
 import time
 
+# CPU-only: the legacy (pre-thunk) XLA CPU runtime serializes pipelined
+# dispatch, which would hide the async serve loop's overlap win in the
+# container smoke runs (see runtime_env; harmless on real accelerators)
+from repro.runtime_env import enable_cpu_thunk_runtime
+
+enable_cpu_thunk_runtime()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -35,6 +42,13 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=24)
     ap.add_argument("--engine", choices=("continuous", "paged", "bucketed"),
                     default="continuous")
+    ap.add_argument("--sync", action="store_true",
+                    help="disable the double-buffered host loop "
+                         "(inflight=1; continuous/paged engines only)")
+    ap.add_argument("--stream", action="store_true",
+                    help="feed requests through the live-queue API "
+                         "(submit() + a generator source) instead of a "
+                         "pre-collected list")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged engine: tokens per KV block")
     ap.add_argument("--pool-frac", type=float, default=0.5,
@@ -60,16 +74,18 @@ def main() -> None:
           f"(chain={tree.max_depth + 1 == tree.size})")
 
     max_len = 512
+    inflight = 1 if args.sync else 2
     if args.engine == "paged":
         usable = max(int(args.pool_frac * args.batch * max_len)
                      // args.block_size, 4)
         eng = PagedSpeculativeEngine(params, dp, cfg, tree, max_len=max_len,
                                      block_size=args.block_size,
-                                     num_blocks=usable + 1)
+                                     num_blocks=usable + 1, inflight=inflight)
+    elif args.engine == "continuous":
+        eng = SpeculativeEngine(params, dp, cfg, tree, max_len=max_len,
+                                inflight=inflight)
     else:
-        engine_cls = (SpeculativeEngine if args.engine == "continuous"
-                      else BucketedEngine)
-        eng = engine_cls(params, dp, cfg, tree, max_len=max_len)
+        eng = BucketedEngine(params, dp, cfg, tree, max_len=max_len)
     rs = np.random.RandomState(0)
     n_requests = args.requests or args.batch
     reqs = []
@@ -79,13 +95,26 @@ def main() -> None:
         reqs.append(Request(
             prompt=rs.randint(0, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=args.max_new_tokens))
-    stats = eng.serve(reqs, max_batch=args.batch)
+    if args.stream and args.engine != "bucketed":
+        # live-queue path: half the traffic is submitted up front, the
+        # rest arrives through a generator source the loop pulls from as
+        # slots free up (launch/serve is also CI's smoke for this API)
+        split = max(n_requests // 2, 1)
+        for r in reqs[:split]:
+            eng.submit(r)
+        stats = eng.serve(source=iter(reqs[split:]), max_batch=args.batch)
+    else:
+        stats = eng.serve(reqs, max_batch=args.batch)
     print(f"[serve] engine={args.engine} steps={stats.steps} "
           f"tokens={stats.tokens} tok/step={stats.tokens_per_step:.2f} "
           f"tok/s={stats.tokens_per_s:.1f} "
           f"util={stats.slot_utilization:.3f} "
           f"mean_lat={stats.mean_latency_s * 1e3:.1f}ms "
-          f"p99_lat={stats.p99_latency_s * 1e3:.1f}ms")
+          f"p99_lat={stats.p99_latency_s * 1e3:.1f}ms "
+          f"host_stall={stats.host_stall_s * 1e3:.1f}ms "
+          f"({stats.host_stall_frac:.0%} of wall) "
+          f"read_wait={stats.read_wait_s * 1e3:.1f}ms "
+          f"inflight_peak={stats.steps_in_flight}")
     if stats.pool_tokens:
         print(f"[serve] paged KV: pool={stats.pool_tokens} tok "
               f"(dense equivalent {stats.dense_equiv_tokens} tok, "

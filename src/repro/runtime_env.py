@@ -1,0 +1,24 @@
+"""Process-level runtime knobs that must be set before XLA initializes.
+
+Kept free of jax imports on purpose: entry points call these at the top
+of the module, before anything that could instantiate a backend client.
+"""
+from __future__ import annotations
+
+import os
+
+
+def enable_cpu_thunk_runtime() -> None:
+    """Opt the XLA CPU backend into the thunk runtime (idempotent).
+
+    jax 0.4.37's LEGACY CPU runtime serializes pipelined dispatch — a
+    dispatched computation whose inputs aren't ready yet runs ~2x
+    slower — which inverts the async serve loop's host/device overlap
+    win (DESIGN.md §7).  The thunk runtime (the default on newer
+    jaxlibs) pipelines properly.  No effect on real accelerators, and a
+    no-op if the operator already set the flag either way in XLA_FLAGS.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_cpu_use_thunk_runtime=true").strip()

@@ -12,6 +12,12 @@ After a verify forward pass the per-group caches hold *candidates*:
 Both rules are pure gathers — no recompute — which is what makes chain
 speculation on SSM/hybrid architectures cheap (DESIGN.md §4).
 
+Commit is part of the traced step and must stay that way: nothing here
+may read a device value back to the host (no ``int()``/``bool()`` on
+arrays, no data-dependent Python branching).  The async serve loop
+(DESIGN.md §7) dispatches step k+1 before step k's results are read —
+a host sync inside commit would re-serialize the pipeline it overlaps.
+
 Commit addresses the cache in LOGICAL coordinates either way.  Dense
 (``block_table`` None): each attention array is the per-slot (B, S) view
 and compaction indexes it directly.  Paged: each attention array is the
@@ -97,8 +103,10 @@ def commit_cache(candidates, cache_len, path_nodes, n_accept, *,
             else:
                 new = _commit_state(arr, last_node)
                 if active is not None:
-                    assert prev is not None, \
-                        "active-masked commit of a state group needs prev"
+                    if prev is None:    # trace-time check, never a host sync
+                        raise ValueError(
+                            "active-masked commit of a state group needs "
+                            "prev (the pre-verify committed cache)")
                     old = prev[gi][key]
                     sel = active.reshape((1, -1) + (1,) * (new.ndim - 2))
                     new = jnp.where(sel, new, old.astype(new.dtype))

@@ -16,6 +16,18 @@ signature depends only on ``(max_batch, tree)`` — never on queue
 occupancy — so the engine compiles exactly one step (plus one prefill per
 prompt-length bucket).
 
+The serve loop is **asynchronous and double-buffered** by default
+(DESIGN.md §7): step ``k+1`` is dispatched before step ``k``'s emissions
+are read back, so host-side harvest/join/allocator work overlaps device
+compute.  All device→host reads (emissions, the first token a join
+samples) run one step behind the dispatch frontier; ``inflight=1``
+restores the fully synchronous loop.  The overlap reorders host
+bookkeeping only — never device math — so greedy outputs are byte-exact
+across ``inflight`` settings (a tested invariant).  Requests arrive
+through a live queue: ``submit()`` enqueues at any time (including
+mid-serve, from a ``source`` callable/generator handed to ``serve``) and
+``drain()`` serves whatever has been submitted.
+
 ``PagedSpeculativeEngine`` — the same scheduler over a paged KV cache
 (``serving/paged.py``, DESIGN.md §6).  Attention caches live in a global
 block pool that may be smaller than ``max_batch × max_len``
@@ -38,7 +50,8 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import (Any, Callable, Iterable, List, NamedTuple, Optional,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +61,7 @@ from repro.configs.base import ModelConfig
 from repro.models.model import paged_kernel_covers
 from repro.core.speculative import (autoregressive_step, init_decode_state,
                                     init_pool_state, join_slot,
-                                    spec_decode_step)
+                                    max_emitted_per_step, spec_decode_step)
 from repro.serving.paged import (NULL_BLOCK, BlockAllocator, init_paged_state,
                                  paged_autoregressive_step, paged_join_slot,
                                  paged_spec_decode_step)
@@ -96,6 +109,20 @@ class EngineStats:
                      the prefill token are excluded)
     wall_s           wall-clock seconds inside the serving loop (warmup
                      compiles excluded)
+    host_stall_s     seconds the host spent working while NO step was in
+                     flight — i.e. time the host-side harvest/join/
+                     allocator bookkeeping STARVED the device pipeline.
+                     This is the serialization the async loop exists to
+                     remove: with ``inflight>=2`` host work runs behind a
+                     dispatched step (stall ~0); the synchronous loop
+                     (``inflight=1``) pays it between every read and the
+                     next dispatch
+    read_wait_s      seconds blocked inside device→host reads (step
+                     emissions, deferred join tokens) — device-bound
+                     time, reported separately so host-caused stall
+                     isn't conflated with waiting on compute
+    steps_in_flight  high-water mark of dispatched-but-unharvested steps
+                     (1 = synchronous loop, 2 = double-buffered)
     accept_lengths   per-step mean accepted+bonus length over live rows
     active_slot_steps / capacity_slot_steps
                      slot-occupancy accounting: capacity counts
@@ -128,6 +155,9 @@ class EngineStats:
     steps: int = 0
     tokens: int = 0
     wall_s: float = 0.0
+    host_stall_s: float = 0.0
+    read_wait_s: float = 0.0
+    steps_in_flight: int = 0
     accept_lengths: List[float] = field(default_factory=list)
     active_slot_steps: int = 0
     capacity_slot_steps: int = 0
@@ -144,6 +174,12 @@ class EngineStats:
     @property
     def tokens_per_step(self) -> float:
         return self.tokens / max(self.steps, 1)
+
+    @property
+    def host_stall_frac(self) -> float:
+        """Fraction of serving wall-clock during which host bookkeeping
+        starved the device pipeline (no step in flight)."""
+        return self.host_stall_s / max(self.wall_s, 1e-9)
 
     @property
     def tokens_per_s(self) -> float:
@@ -175,6 +211,34 @@ class EngineStats:
         if not self.dense_equiv_tokens:
             return 1.0
         return self.pool_tokens / self.dense_equiv_tokens
+
+
+class _StepRecord(NamedTuple):
+    """One dispatched-but-unharvested decode step (DESIGN.md §7).
+
+    Everything the harvest needs is snapshotted at dispatch time: the
+    ``active`` mask and slot→request assignment the step ran with (host
+    state moves on while the step is in flight), plus the joins issued
+    just before it — each carrying the joined state's ``last_token``
+    device array so the first sampled token can be read one step behind,
+    without flushing the pipeline at join time.  Only the emission
+    arrays are retained — holding the whole ``StepResult`` would keep
+    the step's full cache pytree alive one extra step for nothing.
+    """
+
+    emitted: Any                    # (B, D+1) device future
+    n_emitted: Any                  # (B,) device future
+    active: np.ndarray              # (B,) bool mask the step was run with
+    slots: List[Optional["Request"]]  # slot→request snapshot at dispatch
+    joins: List[tuple]              # [(slot, Request, last_token devarray)]
+    max_batch: int
+
+
+# A live request source for ``serve``: an iterable (pulled lazily as slot
+# capacity frees up; exhaustion ends the stream) or a zero-arg callable
+# polled every loop iteration (returns newly arrived requests, an empty
+# iterable for "nothing yet, keep serving", or None for "no more ever").
+RequestSource = Union[Iterable["Request"], Callable[[], Any]]
 
 
 class _EngineBase:
@@ -213,14 +277,30 @@ class SpeculativeEngine(_EngineBase):
 
     Public API
     ----------
-    ``serve(requests, max_batch=8, warmup=True) -> EngineStats`` is the
-    whole surface.  The lifecycle per request: **enqueue** (FIFO) ->
-    **join** the moment a slot frees (bucketed prefill emits the first
-    output token) -> **harvest** after every jitted step (accepted +
-    bonus tokens appended to ``Request.output``, clamped at
+    ``submit(request)`` enqueues (FIFO) at any time — before, between, or
+    during ``serve`` calls.  ``serve(requests=(), *, source=None,
+    max_batch=8, warmup=True) -> EngineStats`` runs the loop until the
+    queue, the optional live ``source`` (see ``RequestSource``), and all
+    in-flight steps drain; ``drain()`` is ``serve`` over what has been
+    submitted.  The lifecycle per request: **enqueue** -> **join** the
+    moment a slot frees (bucketed prefill; its first sampled token is
+    read back one step later) -> **harvest** one step behind dispatch
+    (accepted + bonus tokens appended to ``Request.output``, clamped at
     ``max_new_tokens``, cut at ``eos_token``) -> **finish** (slot freed
-    and refilled from the queue in the same loop iteration).  ``serve``
-    may be called repeatedly; ``stats`` accumulates across calls.
+    and refilled from the queue).  ``serve`` may be called repeatedly;
+    ``stats`` accumulates across calls.
+
+    Async pipeline (DESIGN.md §7): with ``inflight=2`` (the default) the
+    loop dispatches step ``k+1`` before reading step ``k``'s emissions,
+    so joins, admissions, growth/preemption, and the Python harvest all
+    run while the device is busy.  Host state (``Request.output``, the
+    paged allocator) is therefore one step stale at dispatch time; every
+    capacity decision budgets for that staleness
+    (``_stale_allowance``), and a request discovered finished at harvest
+    may ride through one already-dispatched step as a masked "zombie"
+    row whose emissions are discarded.  Device math never reorders, so
+    greedy outputs are byte-exact for any ``inflight`` (tested).
+    ``inflight=1`` is the synchronous loop.
 
     Active-mask semantics: the jitted step always spans ``max_batch``
     rows.  Rows whose slot is empty or whose request finished ride along
@@ -241,10 +321,16 @@ class SpeculativeEngine(_EngineBase):
     """
 
     def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
-                 prefill_bucket: int = 32, **kw):
+                 prefill_bucket: int = 32, inflight: int = 2, **kw):
         super().__init__(params, draft_params, cfg, tree, **kw)
         self.prefill_bucket = (1 if cfg.block_kind in ("mamba2", "rwkv6")
                                else max(int(prefill_bucket), 1))
+        if inflight < 1:
+            raise ValueError(f"inflight must be >= 1: {inflight}")
+        self.inflight = int(inflight)
+        self._queue: deque = deque()
+        self._inflight: deque = deque()
+        self._live_joins: dict = {}          # slot -> (Request, last_token)
         greedy = self.criterion == "greedy"
         # jit retraces per padded prompt shape, i.e. one compile per bucket
         self._join_fn = jax.jit(
@@ -261,6 +347,24 @@ class SpeculativeEngine(_EngineBase):
     def _scratch(self) -> int:
         """Cache positions one verify step writes past ``cache_len``."""
         return self.tree.size if self.use_speculative else 1
+
+    @property
+    def _max_emit(self) -> int:
+        """Most tokens one step can commit to a row (accepted + bonus)."""
+        return max_emitted_per_step(self.tree,
+                                    speculative=self.use_speculative)
+
+    @property
+    def _stale_allowance(self) -> int:
+        """Cache positions a row can advance past the host's knowledge.
+
+        At dispatch time up to ``inflight - 1`` steps are unharvested,
+        each committing at most ``_max_emit`` tokens, so every capacity
+        decision (admission, growth, the up-front reject) budgets this
+        many extra positions.  Zero for the synchronous loop — the
+        formulas below then reduce exactly to the pre-async ones.
+        """
+        return (self.inflight - 1) * self._max_emit
 
     def _context(self, r: Request) -> np.ndarray:
         """Prefill context: the prompt, plus tokens already generated when
@@ -283,12 +387,16 @@ class SpeculativeEngine(_EngineBase):
         return {self._pad_len(len(r.prompt)) for r in requests}
 
     def _check_capacity(self, r: Request) -> None:
-        need = self._pad_len(len(r.prompt)) + r.max_new_tokens + self._scratch
+        # the stale allowance covers the one zombie step a finished
+        # request may ride through before the harvest discovers it
+        need = (self._pad_len(len(r.prompt)) + r.max_new_tokens
+                + self._scratch + self._stale_allowance)
         if need > self.max_len:
             raise ValueError(
                 f"request needs {need} cache slots (padded prompt "
                 f"{self._pad_len(len(r.prompt))} + budget {r.max_new_tokens} "
-                f"+ {self._scratch} verify scratch) but max_len={self.max_len}")
+                f"+ {self._scratch} verify scratch + {self._stale_allowance} "
+                f"async staleness) but max_len={self.max_len}")
 
     def _join(self, state, slot: int, r: Request):
         padded, n = self._padded_context(r)
@@ -325,15 +433,65 @@ class SpeculativeEngine(_EngineBase):
     def _post_serve(self) -> None:
         pass
 
+    # -- live queue ----------------------------------------------------------
+
+    def submit(self, r: Request) -> Request:
+        """Enqueue one request (validated up front).  Legal at any time:
+        before ``serve``, between calls, or mid-serve from a ``source``
+        callback — the loop admits it the moment a slot and (paged)
+        blocks are free."""
+        self._check_capacity(r)
+        if r.t_enqueue is None:
+            r.t_enqueue = time.time()
+        self._queue.append(r)
+        return r
+
+    def drain(self, *, max_batch: int = 8, warmup: bool = True
+              ) -> EngineStats:
+        """Serve everything ``submit``-ted so far and return the stats."""
+        return self.serve(max_batch=max_batch, warmup=warmup)
+
+    def _poll_source(self, pending: deque, max_batch: int) -> None:
+        """Pull newly arrived requests.  Callables are polled once per
+        loop iteration (None => exhausted); iterators are pulled with
+        backpressure (at most ``max_batch`` queued-unjoined requests)."""
+        if self._src_done:
+            return
+        if self._src_call is not None:
+            batch = self._src_call()
+            if batch is None:
+                self._src_done = True
+            else:
+                for r in batch:
+                    self.submit(r)
+            return
+        while len(pending) < max_batch:
+            try:
+                r = next(self._src_iter)
+            except StopIteration:
+                self._src_done = True
+                return
+            self.submit(r)
+
     # -- serving -------------------------------------------------------------
 
-    def serve(self, requests: List[Request], *, max_batch: int = 8,
+    def serve(self, requests: Iterable[Request] = (), *,
+              source: Optional[RequestSource] = None, max_batch: int = 8,
               warmup: bool = True) -> EngineStats:
         for r in requests:
             self._check_capacity(r)
-        pending = deque(requests)
-        slots: List[Optional[Request]] = [None] * max_batch
-        active = np.zeros(max_batch, bool)
+            self._queue.append(r)      # enqueue-stamped after warmup
+        pending = self._queue
+        self._src_call = source if callable(source) else None
+        self._src_iter = (iter(source)
+                          if source is not None and self._src_call is None
+                          else None)
+        self._src_done = source is None
+        self._slots: List[Optional[Request]] = [None] * max_batch
+        self._active = np.zeros(max_batch, bool)
+        self._inflight = deque()
+        self._live_joins = {}
+        slots, active = self._slots, self._active
 
         self.rng, sub = jax.random.split(self.rng)
         state = self._init_pool(max_batch, sub)
@@ -341,18 +499,41 @@ class SpeculativeEngine(_EngineBase):
         if warmup:  # compile the step + every join bucket outside the clock
             jax.block_until_ready(self._run_step(
                 state, jnp.asarray(active)).state.cache_len)
-            for P in sorted(self._warm_buckets(requests)):
+            for P in sorted(self._warm_buckets(list(pending))):
                 jax.block_until_ready(self._warm_join(state, P).cache_len)
 
-        # enqueue AFTER warmup so latency measures serving, not XLA compiles
+        # enqueue AFTER warmup so latency measures serving, not XLA
+        # compiles (live submit()s carry their own arrival stamp already)
         now = time.time()
-        for r in requests:
-            r.t_enqueue = now
+        for r in pending:
+            if r.t_enqueue is None:
+                r.t_enqueue = now
 
         t0 = time.time()
-        while pending or active.any():
-            # refill every free slot before the next step (strict FIFO:
-            # a head-of-line request the pool can't admit blocks the rest)
+        # device-starvation accounting: a window opens whenever the
+        # in-flight queue drains (device has nothing to chew on) and
+        # closes at the next join/step dispatch — its span is host work
+        # that serialized with device compute (EngineStats.host_stall_s)
+        self._starve_t0: Optional[float] = t0
+        while True:
+            self._poll_source(pending, max_batch)
+            if (not pending and not active.any() and not self._inflight
+                    and self._src_done):
+                break
+
+            # harvest-first policy: give up one step of overlap when the
+            # read buys better scheduling than the overlap is worth —
+            # at a stream's tail (a dispatch could be all-zombie) or when
+            # a likely finish would free a slot/blocks for the queue head
+            while self._inflight and self._harvest_first(pending):
+                self._harvest(self._inflight.popleft())
+
+            # refill every free slot before the next step (strict FIFO: a
+            # head-of-line request the pool can't admit blocks the rest).
+            # The join is DISPATCHED into the device lane without flushing
+            # the in-flight step; its first sampled token is read back at
+            # harvest, one step behind.
+            joins = []
             for si in range(max_batch):
                 if active[si] or not pending:
                     continue
@@ -360,37 +541,129 @@ class SpeculativeEngine(_EngineBase):
                     break
                 r = pending.popleft()
                 state = self._join(state, si, r)
+                self._device_fed()      # prefill queued: device not starved
                 r.t_join = time.time()
-                tok0 = int(state.last_token[si])
-                r.output.append(tok0)
-                if (len(r.output) >= r.max_new_tokens or
-                        (r.eos_token is not None and tok0 == r.eos_token)):
-                    self._finish(r)            # degenerate budget/EOS at t=0
-                    self._release(si)
-                    continue
+                self._live_joins[si] = (r, state.last_token)
+                joins.append((si, r, state.last_token))
                 slots[si] = r
                 active[si] = True
             # paged: grow block tables for the coming step, preempting the
             # most-recently-joined slots back into `pending` on exhaustion
             state = self._before_step(state, slots, active, pending)
-            if not active.any():
-                if pending and not self._admit(pending[0]):
-                    raise RuntimeError(
-                        "pool deadlock: no active slots and the queue head "
-                        "cannot be admitted — the block pool is too small "
-                        "for this request stream")
-                continue
+            # a join preempted before its step dispatched was force-read
+            # and requeued by _preempt; drop it from this step's record
+            joins = [(si, r, lt) for si, r, lt in joins
+                     if self._live_joins.get(si, (None,))[0] is r]
 
-            res = self._run_step(state, jnp.asarray(active))
-            state = res.state
-            jax.block_until_ready(state.cache_len)
-            emitted = np.asarray(res.emitted)
-            n_em = np.asarray(res.n_emitted)
+            if active.any():
+                res = self._run_step(state, jnp.asarray(active))
+                self._device_fed()
+                state = res.state
+                self._inflight.append(_StepRecord(
+                    res.emitted, res.n_emitted, active.copy(), list(slots),
+                    joins, max_batch))
+                self.stats.steps_in_flight = max(self.stats.steps_in_flight,
+                                                 len(self._inflight))
+                # double-buffer: harvest step k only once step k+1 is in
+                # the lane (inflight=1 degenerates to the sync loop)
+                while len(self._inflight) >= self.inflight:
+                    self._harvest(self._inflight.popleft())
+            elif self._inflight:
+                # nothing dispatchable: drain the pipeline — harvested
+                # finishes free slots/blocks and may unblock admission
+                self._harvest(self._inflight.popleft())
+            elif pending:
+                raise RuntimeError(
+                    "pool deadlock: no active slots and the queue head "
+                    "cannot be admitted — the block pool is too small "
+                    "for this request stream")
+            else:
+                time.sleep(2e-4)       # idle: waiting on a live source
+                self._starve_t0 = time.time()   # no-traffic idle != stall
+        self.stats.wall_s += time.time() - t0
+        self._post_serve()
+        return self.stats
 
-            live = active.copy()
-            for si in np.where(live)[0]:
-                r = slots[si]
-                self._advance(si, int(n_em[si]))
+    def _harvest_first(self, pending: deque) -> bool:
+        """Should the loop read an in-flight step BEFORE dispatching?
+
+        Run-ahead has a cost: the host schedules on stale info, so a
+        request that finished inside the window rides one zombie step
+        and its replacement joins one step late.  Harvesting first gives
+        that staleness back in exactly the situations where fresh info
+        outweighs the overlap of one step:
+
+          * a queued request could join right now (free slot, admittable
+            head): dispatch after joining — never block (returns False);
+          * queue non-empty but nothing joinable: harvest if ANY active
+            row may have finished inside the window (``output`` plus the
+            window's maximum commits reaches its budget) — the finish
+            would free a slot/blocks for the head;
+          * empty queue (tail): harvest only when EVERY row may be done —
+            dispatching then risks a step nobody needs.
+
+        A scheduling heuristic only — outputs are byte-identical either
+        way.  EOS finishes are not predicted (a surprise EOS costs at
+        most one riding-along zombie row, which the static-shape step
+        spans anyway).  With ``inflight=1`` the window is always empty
+        here, so the synchronous loop is untouched.
+        """
+        rows = np.where(self._active)[0]
+        if rows.size == 0:
+            return False
+        me = self._max_emit
+        possibly_done = []
+        for si in rows:
+            r = self._slots[si]
+            k = sum(1 for rec in self._inflight
+                    if rec.active[si] and rec.slots[si] is r)
+            possibly_done.append(
+                len(r.output) + k * me >= r.max_new_tokens)
+        if pending:
+            if not self._active.all() and self._admit(pending[0]):
+                return False
+            return any(possibly_done)
+        return all(possibly_done)
+
+    # -- harvest (one step behind the dispatch frontier) ---------------------
+
+    def _device_fed(self) -> None:
+        """Close an open starvation window: device work was just queued,
+        so the host is no longer serializing with the device."""
+        if self._starve_t0 is not None:
+            self.stats.host_stall_s += time.time() - self._starve_t0
+            self._starve_t0 = None
+
+    def _harvest(self, rec: _StepRecord) -> None:
+        """Read one dispatched step's emissions and apply them to the
+        requests it ran over (snapshotted in ``rec`` — host scheduling has
+        moved on since dispatch).  This is the ONLY place the serve loop
+        blocks on the device."""
+        t0 = time.time()
+        emitted = np.asarray(rec.emitted)           # blocks until the step
+        n_em = np.asarray(rec.n_emitted)            # (and its joins) are done
+        self.stats.read_wait_s += time.time() - t0
+        if not self._inflight and self._starve_t0 is None:
+            # pipeline drained: host bookkeeping from here to the next
+            # dispatch serializes with the (idle) device
+            self._starve_t0 = time.time()
+
+        # first tokens of the joins dispatched just before this step (the
+        # step above already finished, so these reads are free now)
+        for si, r, last_tok in rec.joins:
+            ent = self._live_joins.get(si)
+            if ent is None or ent[0] is not r:
+                continue                # force-read early by a preemption
+            del self._live_joins[si]
+            self._absorb_first_token(r, int(np.asarray(last_tok)[si]))
+
+        live = 0
+        for si in np.where(rec.active)[0]:
+            r = rec.slots[si]
+            if not r.done:
+                live += 1
+                if self._slots[si] is r:    # still owns the slot (it may
+                    self._advance(si, int(n_em[si]))   # have been preempted)
                 appended = 0
                 for t in emitted[si][:n_em[si]]:
                     # clamp at the budget: tokens past max_new_tokens are
@@ -405,16 +678,49 @@ class SpeculativeEngine(_EngineBase):
                 self.stats.tokens += appended
                 if r.done or len(r.output) >= r.max_new_tokens:
                     self._finish(r)
-                    slots[si] = None
-                    active[si] = False
-                    self._release(si)
-            self.stats.steps += 1
-            self.stats.accept_lengths.append(float(n_em[live].mean()))
-            self.stats.active_slot_steps += int(live.sum())
-            self.stats.capacity_slot_steps += max_batch
-        self.stats.wall_s += time.time() - t0
-        self._post_serve()
-        return self.stats
+            # else: zombie row — finished before this (already-dispatched)
+            # step was harvested; its emissions are discarded
+            if r.done and self._slots[si] is r:
+                self._slots[si] = None
+                self._active[si] = False
+                self._release(si)
+        self.stats.steps += 1
+        if rec.active.any():
+            self.stats.accept_lengths.append(float(n_em[rec.active].mean()))
+        self.stats.active_slot_steps += live
+        self.stats.capacity_slot_steps += rec.max_batch
+
+    def _absorb_first_token(self, r: Request, tok0: int) -> bool:
+        """Append a join's first sampled token; True if it finished the
+        request outright (degenerate budget/EOS at t=0)."""
+        r.output.append(tok0)
+        if (len(r.output) >= r.max_new_tokens or
+                (r.eos_token is not None and tok0 == r.eos_token)):
+            self._finish(r)
+            return True
+        return False
+
+    def _flush_join(self, si: int) -> None:
+        """Force-read a not-yet-harvested join's first token.  A sync
+        point, taken only when a just-joined slot is preempted before its
+        first step harvests — without this the requeued request would be
+        re-prefilled missing (or double-counting) its first token."""
+        ent = self._live_joins.pop(si, None)
+        if ent is None:
+            return
+        r, last_tok = ent
+        t0 = time.time()
+        tok0 = int(np.asarray(last_tok)[si])
+        self.stats.read_wait_s += time.time() - t0
+        self._absorb_first_token(r, tok0)
+
+    def _drain_slot(self, si: int, r: Request) -> None:
+        """Harvest every in-flight step in which slot ``si`` ran request
+        ``r``.  Preemption calls this so ``r.output`` is complete before
+        the request is requeued (resume re-prefills prompt + output)."""
+        while any(rec.active[si] and rec.slots[si] is r
+                  for rec in self._inflight):
+            self._harvest(self._inflight.popleft())
 
     def _finish(self, r: Request) -> None:
         r.done = True
@@ -447,6 +753,16 @@ class PagedSpeculativeEngine(SpeculativeEngine):
     up front), which guarantees a lone slot can always grow — preemption
     therefore always makes progress.  Recurrent-state groups stay dense
     per-slot (O(1) each, nothing to page).
+
+    Under the async loop (``inflight>=2``, DESIGN.md §7) every allocator
+    decision runs in the pre-dispatch phase against host state that is
+    one step stale, so join/growth/admission each budget
+    ``_stale_allowance`` extra positions — coverage for the tokens the
+    in-flight step may commit before its harvest lands.  Freed blocks
+    can be re-handed out while a step still holding the old table is in
+    flight: device program order makes that safe (the old step's writes
+    complete before any later prefill/commit that could read the block —
+    see §7 for the full argument).
 
     ``paged_attention="native"`` (default) runs the step's verify
     attention with the block-table-aware ``tree_attention_paged`` Pallas
@@ -496,7 +812,7 @@ class PagedSpeculativeEngine(SpeculativeEngine):
     def _join(self, state, slot: int, r: Request):
         padded, n = self._padded_context(r)
         got = self._alloc.alloc(self._alloc.blocks_for(
-            max(len(padded), n + self._scratch)))
+            max(len(padded), n + self._scratch + self._stale_allowance)))
         assert got is not None, "_admit must have checked the free list"
         self._owned[slot] = got
         self._tables[slot, :] = NULL_BLOCK
@@ -561,9 +877,10 @@ class PagedSpeculativeEngine(SpeculativeEngine):
 
     def _check_capacity(self, r: Request) -> None:
         # worst-case lifetime coverage: the (padded) resumed context can
-        # reach prompt+budget tokens, plus one verify-scratch region
+        # reach prompt+budget tokens, plus one verify-scratch region,
+        # plus the async staleness margin growth budgets per step
         worst = (self._pad_len(len(r.prompt) + r.max_new_tokens)
-                 + self._scratch)
+                 + self._scratch + self._stale_allowance)
         view_len = self.blocks_per_slot * self.block_size
         if worst > view_len:
             raise ValueError(
@@ -580,8 +897,8 @@ class PagedSpeculativeEngine(SpeculativeEngine):
 
     def _admit(self, r: Request) -> bool:
         n = len(r.prompt) + len(r.output)
-        need = self._alloc.blocks_for(max(self._pad_len(n),
-                                          n + self._scratch))
+        need = self._alloc.blocks_for(
+            max(self._pad_len(n), n + self._scratch + self._stale_allowance))
         # headroom: keep one growth block per already-joined slot, so
         # admitting this request doesn't immediately force a preemption
         # (which would thrash: evict, readmit, re-prefill, evict ...).
@@ -592,14 +909,18 @@ class PagedSpeculativeEngine(SpeculativeEngine):
 
     def _before_step(self, state, slots, active, pending):
         """Grow every active slot's table to cover the coming step's
-        scratch region; preempt newest-first when the pool runs dry."""
+        scratch region — PLUS the stale allowance, since under the async
+        loop ``_slot_len`` lags the device by the in-flight step's
+        commits; preempt newest-first when the pool runs dry."""
         order = sorted(np.where(active)[0], key=lambda s: self._join_seq[s])
         for si in order:
-            if not active[si]:
-                continue                    # already preempted as a victim
-            while True:
+            # re-checked every round: a _preempt below may evict si itself
+            # OR its drain may harvest si's finish and release it — growing
+            # a released slot would orphan the blocks at the next join
+            while active[si]:
                 need = (self._alloc.blocks_for(
-                    int(self._slot_len[si]) + self._scratch)
+                    int(self._slot_len[si]) + self._scratch
+                    + self._stale_allowance)
                     - len(self._owned[si]))
                 if need <= 0:
                     break
@@ -612,17 +933,28 @@ class PagedSpeculativeEngine(SpeculativeEngine):
                 victim = max(np.where(active)[0],
                              key=lambda s: self._join_seq[s])
                 self._preempt(int(victim), slots, active, pending)
-                if victim == si:
-                    break                   # evicted ourselves; stop growing
         return state
 
     def _preempt(self, si: int, slots, active, pending) -> None:
         r = slots[si]
-        pending.appendleft(r)               # resume ASAP, FIFO preserved
+        # async: the victim's output must be complete before it is
+        # requeued (resume re-prefills prompt + output).  Force-read its
+        # join if unharvested, then drain every in-flight step it ran in
+        # — the only sync points the async loop takes, both rare, both on
+        # the already-expensive eviction path.
+        self._flush_join(si)
+        self._drain_slot(si, r)
+        if slots[si] is not r:
+            # the drain discovered the request finished (budget/EOS) and
+            # already released the slot — nothing left to evict
+            active[si] = False
+            return
         slots[si] = None
         active[si] = False
         self._release(si)
-        self.stats.preemptions += 1
+        if not r.done:
+            pending.appendleft(r)           # resume ASAP, FIFO preserved
+            self.stats.preemptions += 1
 
     def _advance(self, slot: int, n_tokens: int) -> None:
         self._slot_len[slot] += n_tokens    # host mirror of cache_len
@@ -709,12 +1041,22 @@ class BucketedEngine(_EngineBase):
 
         produced = 1
         t0 = time.time()
+        t_read_end = None
         while produced < budget and not all(r.done for r in batch):
             res = self._run_step(state)
+            if t_read_end is not None:
+                # fully synchronous baseline: all host bookkeeping since
+                # the last read ran against an idle device
+                self.stats.host_stall_s += time.time() - t_read_end
             state = res.state
+            t_sync = time.time()
             jax.block_until_ready(state.cache_len)
             emitted = np.asarray(res.emitted)
             n_em = np.asarray(res.n_emitted)
+            t_read_end = time.time()
+            self.stats.read_wait_s += t_read_end - t_sync
+            # fully synchronous scheduler: exactly one step ever in flight
+            self.stats.steps_in_flight = max(self.stats.steps_in_flight, 1)
             live = np.array([not r.done for r in batch])
             for bi, r in enumerate(batch):
                 if r.done:

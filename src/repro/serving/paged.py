@@ -47,7 +47,13 @@ The host-side ``BlockAllocator`` (heap-ordered free pool, O(log n) per
 block, ascending-id handout) lives here too; the serving policy around it
 — allocation on join, growth before every step, release on finish,
 preemption-to-queue on exhaustion — is
-``serving/engine.py::PagedSpeculativeEngine``.
+``serving/engine.py::PagedSpeculativeEngine``.  Under the async serve
+loop (DESIGN.md §7) every one of those decisions runs in the
+pre-dispatch phase against host mirrors that are one step stale; the
+engine compensates with a per-step staleness margin, and block recycling
+across in-flight steps is safe by device program order (an old step's
+writes into a freed block always execute before any later prefill or
+commit that could make the block readable).
 """
 from __future__ import annotations
 

@@ -1,0 +1,147 @@
+"""Benchmark regression gate tests (scripts/check_bench_regression.py).
+
+Pure host-side: the gate is arithmetic over two JSON documents, so these
+tests build small documents by hand and assert the CI contract — pass on
+identical results, fail on a slowed kernel / grown transient / shrunk
+coverage / broken parity — plus the CLI exit codes the push job relies
+on.  The committed ``results/bench_kernels.baseline.json`` itself is
+sanity-checked for the fields the gate reads.
+"""
+import importlib.util
+import json
+import os
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+_SCRIPT = os.path.join(_ROOT, "scripts", "check_bench_regression.py")
+_BASELINE = os.path.join(_ROOT, "results", "bench_kernels.baseline.json")
+
+spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                              _SCRIPT)
+gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(gate)
+
+
+def _doc():
+    return {
+        "tree_attention_paged_sweep": [
+            {"B": 2, "block_size": 16, "occupancy": 0.5,
+             "paged_vs_dense_max_err": 1e-6,
+             "dense_us": 100.0, "shim_us": 150.0, "paged_us": 120.0,
+             "allocated_blocks": 32,
+             "shim_transient_bytes": 1 << 20,
+             "paged_transient_bytes": 1 << 19,
+             "step_transient_tokens_native": 32,
+             "step_transient_tokens_shim": 1024},
+        ],
+        "csv_rows": ["kernel_flash_attention,500.0,interpret_max_err=1e-7"],
+    }
+
+
+def test_identical_results_pass():
+    assert gate.compare(_doc(), _doc(), tol=3.0) == []
+
+
+def test_faster_results_pass():
+    fresh = _doc()
+    fresh["tree_attention_paged_sweep"][0]["paged_us"] = 1.0
+    fresh["tree_attention_paged_sweep"][0]["paged_transient_bytes"] = 1
+    assert gate.compare(fresh, _doc(), tol=3.0) == []
+
+
+def test_slowed_kernel_trips():
+    fresh = _doc()
+    fresh["tree_attention_paged_sweep"][0]["paged_us"] *= 10
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert len(bad) == 1 and "paged_us" in bad[0]
+
+
+def test_timing_within_tolerance_passes():
+    fresh = _doc()
+    fresh["tree_attention_paged_sweep"][0]["paged_us"] *= 2.5   # < tol 3
+    assert gate.compare(fresh, _doc(), tol=3.0) == []
+
+
+def test_transient_memory_growth_trips_exactly():
+    """Memory-model columns are deterministic: ANY growth fails, no
+    tolerance factor applies."""
+    fresh = _doc()
+    fresh["tree_attention_paged_sweep"][0]["paged_transient_bytes"] += 1
+    bad = gate.compare(fresh, _doc(), tol=100.0)
+    assert len(bad) == 1 and "paged_transient_bytes" in bad[0]
+
+
+def test_step_transient_tokens_growth_trips():
+    fresh = _doc()
+    fresh["tree_attention_paged_sweep"][0]["step_transient_tokens_native"] = 64
+    bad = gate.compare(fresh, _doc(), tol=100.0)
+    assert len(bad) == 1 and "step_transient_tokens_native" in bad[0]
+
+
+def test_missing_gated_column_trips():
+    """A gated key silently dropped from a surviving sweep entry (e.g. a
+    bench_kernels.py refactor renaming a column) must fail, not pass."""
+    fresh = _doc()
+    del fresh["tree_attention_paged_sweep"][0]["paged_transient_bytes"]
+    del fresh["tree_attention_paged_sweep"][0]["paged_us"]
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert len(bad) == 2 and all("missing" in b for b in bad)
+
+
+def test_missing_sweep_entry_trips():
+    fresh = _doc()
+    fresh["tree_attention_paged_sweep"] = []
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert len(bad) == 1 and "missing" in bad[0]
+
+
+def test_missing_csv_row_trips():
+    fresh = _doc()
+    fresh["csv_rows"] = []
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert len(bad) == 1 and "kernel_flash_attention" in bad[0]
+
+
+def test_slowed_csv_row_trips():
+    fresh = _doc()
+    fresh["csv_rows"] = ["kernel_flash_attention,5000.0,whatever"]
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert len(bad) == 1 and "csv[kernel_flash_attention]" in bad[0]
+
+
+def test_parity_drift_trips():
+    fresh = _doc()
+    fresh["tree_attention_paged_sweep"][0]["paged_vs_dense_max_err"] = 0.5
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert len(bad) == 1 and "parity" in bad[0]
+
+
+def test_cli_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_doc()))
+    fresh_ok = tmp_path / "ok.json"
+    fresh_ok.write_text(json.dumps(_doc()))
+    slowed_doc = _doc()
+    slowed_doc["tree_attention_paged_sweep"][0]["dense_us"] *= 50
+    fresh_bad = tmp_path / "bad.json"
+    fresh_bad.write_text(json.dumps(slowed_doc))
+    assert gate.main([str(fresh_ok), str(base)]) == 0
+    assert gate.main([str(fresh_bad), str(base)]) == 1
+    # --update-baseline copies fresh over baseline and succeeds
+    assert gate.main([str(fresh_bad), str(base), "--update-baseline"]) == 0
+    assert gate.main([str(fresh_bad), str(base)]) == 0
+
+
+def test_committed_baseline_has_gate_fields():
+    """The baseline CI compares against must carry every column the gate
+    reads — otherwise the gate silently checks nothing."""
+    with open(_BASELINE) as f:
+        doc = json.load(f)
+    sweep = doc["tree_attention_paged_sweep"]
+    assert sweep, "baseline sweep must not be empty"
+    for e in sweep:
+        for k in gate.EXACT_KEYS + gate.TIMING_KEYS + (
+                "paged_vs_dense_max_err",):
+            assert k in e, f"baseline sweep entry missing {k}"
+    assert any(name.startswith("kernel_")
+               for name in gate._csv_timings(doc)), \
+        "baseline must carry kernel csv rows"

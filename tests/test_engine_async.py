@@ -1,0 +1,212 @@
+"""Async double-buffered serve loop tests (DESIGN.md §7).
+
+Load-bearing invariants:
+
+  * **byte-match across overlap depths**: under greedy decoding the async
+    loop (``inflight=2``, the default — step k+1 dispatched before step
+    k's emissions are read) must produce byte-identical outputs to the
+    synchronous loop (``inflight=1``) and to serial ``generate()``, on
+    ragged mixed-length/mixed-budget streams, for the dense and paged
+    engines and for a recurrent-state arch (rwkv6) — the overlap reorders
+    host bookkeeping, never device math;
+  * **live queue**: ``submit()``/``drain()`` and a mid-serve ``source``
+    feed join correctly (requests arriving while steps are in flight);
+  * **paged preemption under async** still resumes byte-exactly — the
+    victim's in-flight emissions are drained before it is requeued;
+  * **one compile**: the async loop adds no step retraces
+    (``_step._cache_size() == 1`` whatever the overlap or occupancy).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.heads import init_draft_params
+from repro.core.trees import default_tree
+from repro.models.model import init_params
+from repro.serving.engine import (PagedSpeculativeEngine, Request,
+                                  SpeculativeEngine)
+
+from test_engine_continuous import (BUDGETS, LENS, MAX_LEN, _requests,
+                                    _serial_ref)
+
+BS = 16                                      # paged block size
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = jax.random.PRNGKey(0)
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = default_tree(8, 2, 3)
+    return cfg, params, dp, tree
+
+
+@pytest.fixture(scope="module")
+def serial_refs(setup):
+    cfg, params, dp, tree = setup
+    rs = np.random.RandomState(0)
+    return [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, n).astype(np.int32),
+                        budget)
+            for n, budget in zip(LENS[:6], BUDGETS[:6])]
+
+
+def _assert_all_match(reqs, serial_refs, what):
+    for r, (_, budget, ref, _) in zip(reqs, serial_refs):
+        assert r.output == ref, f"{what} diverged from serial generate"
+        assert r.done and len(r.output) == len(ref)
+
+
+@pytest.mark.parametrize("inflight", [1, 2, 3])
+def test_dense_async_matches_serial(setup, serial_refs, inflight):
+    """async == sync == serial on a ragged stream, any overlap depth."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                            inflight=inflight)
+    reqs = _requests(serial_refs)
+    stats = eng.serve(reqs, max_batch=3)
+    _assert_all_match(reqs, serial_refs, f"dense inflight={inflight}")
+    assert stats.tokens == sum(len(r.output) - 1 for r in reqs)
+    assert stats.steps_in_flight == inflight   # window actually filled
+    assert stats.read_wait_s > 0.0             # harvests really blocked
+    assert stats.host_stall_s >= 0.0
+    if inflight == 1:
+        # synchronous loop: every step's host bookkeeping starves the
+        # device, so the stall counter must actually accumulate
+        assert stats.host_stall_s > 0.0
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+def test_paged_async_matches_serial(setup, serial_refs, inflight):
+    cfg, params, dp, tree = setup
+    eng = PagedSpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                                 block_size=BS, inflight=inflight)
+    reqs = _requests(serial_refs)
+    eng.serve(reqs, max_batch=3)
+    _assert_all_match(reqs, serial_refs, f"paged inflight={inflight}")
+    assert eng._alloc.blocks_in_use == 0, \
+        "pool must drain completely once every request finishes (leak)"
+
+
+def test_async_is_default(setup):
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    assert eng.inflight == 2                   # double-buffered by default
+
+
+def test_submit_then_drain(setup, serial_refs):
+    """The live-queue API: submit() before serve, drain() runs it."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    reqs = _requests(serial_refs)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.drain(max_batch=3)
+    _assert_all_match(reqs, serial_refs, "submit/drain")
+    assert len(stats.request_latency_s) == len(reqs)
+    assert all(r.latency_s is not None and r.latency_s >= 0 for r in reqs)
+
+
+def test_submit_rejects_oversized_request(setup):
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=96)
+    rs = np.random.RandomState(2)
+    big = Request(prompt=rs.randint(0, cfg.vocab_size, 48).astype(np.int32),
+                  max_new_tokens=64)
+    with pytest.raises(ValueError, match="cache slots"):
+        eng.submit(big)
+
+
+def test_live_submit_mid_serve(setup, serial_refs):
+    """Requests arriving through a source callback WHILE steps are in
+    flight must join and byte-match — the tail requests are only released
+    once the first request finishes, so they provably join mid-serve."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    reqs = _requests(serial_refs)
+    head, tail = reqs[:2], reqs[2:]
+    remaining = list(tail)
+
+    def source():
+        if not remaining:
+            return None                        # stream closed
+        if head[0].done:
+            out, remaining[:] = list(remaining), []
+            return out
+        return ()                              # nothing yet, keep serving
+
+    stats = eng.serve(head, source=source, max_batch=2)
+    _assert_all_match(reqs, serial_refs, "live-submit")
+    assert stats.steps_in_flight == 2
+
+
+def test_generator_source(setup, serial_refs):
+    """An iterator source is pulled lazily with backpressure."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    reqs = _requests(serial_refs)
+    eng.serve(source=iter(reqs), max_batch=2)
+    _assert_all_match(reqs, serial_refs, "generator source")
+
+
+def test_paged_preemption_async_resumes_byte_exact(setup):
+    """Pool sized to force eviction mid-flight: the preempted request's
+    in-flight emissions must be drained before requeue, so the resume
+    (re-prefill of prompt + output) stays byte-exact."""
+    cfg, params, dp, tree = setup
+    rs = np.random.RandomState(7)
+    refs = [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, 16).astype(np.int32),
+                        14)
+            for _ in range(2)]
+    for inflight in (1, 2):
+        eng = PagedSpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                                     block_size=BS, num_blocks=6,
+                                     inflight=inflight)
+        reqs = _requests(refs)
+        stats = eng.serve(reqs, max_batch=2)
+        assert stats.preemptions >= 1, \
+            f"pool sizing should force eviction (inflight={inflight})"
+        _assert_all_match(reqs, refs, f"preempted inflight={inflight}")
+        # eviction churn must never strand blocks: growth against slots
+        # released mid-preemption would permanently shrink the pool
+        assert eng._alloc.blocks_in_use == 0, \
+            f"leaked {eng._alloc.blocks_in_use} blocks (inflight={inflight})"
+
+
+def test_async_one_compile(setup, serial_refs):
+    """The async loop must not add step retraces: occupancy changes,
+    mid-serve submits, and repeated serve calls reuse ONE executable."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    eng.serve(_requests(serial_refs)[:1], max_batch=3)
+    reqs = _requests(serial_refs)
+    eng.serve(reqs[:3], source=iter(reqs[3:]), max_batch=3)
+    assert eng._step._cache_size() == 1, eng._step._cache_size()
+
+
+def test_async_rwkv6_matches_serial():
+    """Recurrent-state arch under the async loop: chain speculation,
+    exact-length prefill, state-group restore — still byte-exact."""
+    from repro.launch.specs import tree_for
+    cfg = dataclasses.replace(get_config("rwkv6-1.6b").reduced(),
+                              dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = tree_for(cfg)
+    rs = np.random.RandomState(0)
+    lens, buds = (12, 19, 25), (8, 10, 6)
+    refs = [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, n).astype(np.int32), b)
+            for n, b in zip(lens, buds)]
+    for inflight in (1, 2):
+        eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                                inflight=inflight)
+        reqs = _requests(refs)
+        eng.serve(reqs, max_batch=2)
+        _assert_all_match(reqs, refs, f"rwkv6 inflight={inflight}")
