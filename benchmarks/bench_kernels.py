@@ -3,8 +3,18 @@ wall-clock (CPU proxy; real perf characterization is the dry-run roofline,
 see benchmarks/roofline.py).
 
 Besides the CSV rows, ``run()`` writes ``results/bench_kernels.json``
-(uploaded as a CI artifact) whose ``tree_attention_paged_sweep`` section
-compares the three tree-attention data paths at several pool occupancies:
+(uploaded as a CI artifact) with two gated sections:
+
+``serve_longprompt`` — the long-prompt ragged serving sweep (random-init
+vicuna-tiny, NO trained checkpoints, so CI's bench-gate job can run it):
+the identical stream — every 4th prompt ~4x the mean — served unchunked
+vs chunked-prefill (DESIGN.md §8), dense and paged.  Gated columns:
+``ttft_ms``/``p99_itl_ms``/``us_per_tok`` within the timing tolerance —
+this is what pins the chunked-prefill responsiveness win (p99
+inter-token latency) against the committed baseline.
+
+``tree_attention_paged_sweep`` — compares the three tree-attention data
+paths at several pool occupancies:
 
   dense  — dense per-slot cache, dense kernel (the non-paged engine);
   shim   — block pool gathered to the dense view, dense kernel on the
@@ -132,6 +142,69 @@ def tree_attention_paged_sweep(*, B=2, Hq=4, Hkv=2, D=64, T=16,
     return out
 
 
+def serve_longprompt_bench(*, n_req=8, max_batch=4, max_new_tokens=24,
+                           max_len=512, long_len=384) -> list:
+    """Long-prompt ragged serve sweep on random-init weights (the gate
+    job trains nothing): unchunked vs chunked prefill on the identical
+    stream.  Returns JSON-able dicts keyed by ``name``; the regression
+    gate pins ``ttft_ms``/``p99_itl_ms``/``us_per_tok`` per row.
+
+    Geometry is deliberately prefill-dominated — chain speculation (small
+    verify step) against 384-token long prompts (~15x the short-prompt
+    mean), i.e. the regime where one monolithic join visibly stalls
+    every active slot and chunking has a spike to flatten.  On a toy
+    where a whole prefill costs about one decode step there is nothing
+    to win (and chunking's per-chunk dispatch overhead shows instead)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.heads import init_draft_params
+    from repro.core.trees import chain_tree
+    from repro.models.model import init_params
+    from repro.serving.engine import (PagedSpeculativeEngine, Request,
+                                      SpeculativeEngine)
+
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = chain_tree(4)
+    engines = [
+        ("unchunked", SpeculativeEngine, {}),
+        ("chunk64", SpeculativeEngine, {"prefill_chunk": 64}),
+        ("chunk128", SpeculativeEngine, {"prefill_chunk": 128}),
+        # fig3-style fractional pool: 0.5x the dense footprint — pool
+        # array traffic per step tracks the pool size on this jnp path,
+        # so the dense-equivalent pool would just benchmark pool copies
+        ("paged_chunk64", PagedSpeculativeEngine,
+         {"block_size": 16, "prefill_chunk": 64,
+          "num_blocks": (max_batch * max_len // 2) // 16 + 1}),
+    ]
+    out = []
+    for name, engine_cls, ekw in engines:
+        rs = np.random.RandomState(0)          # identical stream per engine
+        reqs = []
+        for i in range(n_req):
+            plen = long_len if i % 4 == 0 else int(rs.randint(16, 33))
+            reqs.append(Request(
+                prompt=rs.randint(0, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=max_new_tokens))
+        eng = engine_cls(params, dp, cfg, tree, max_len=max_len, **ekw)
+        stats = eng.serve(reqs, max_batch=max_batch)
+        out.append({
+            "name": name,
+            "n_req": n_req, "max_batch": max_batch,
+            "long_prompt_len": long_len,
+            "tok_per_s": stats.tokens_per_s,
+            "us_per_tok": 1e6 / max(stats.tokens_per_s, 1e-9),
+            "ttft_ms": stats.mean_ttft_s * 1e3,
+            "p99_ttft_ms": stats.p99_ttft_s * 1e3,
+            "p99_itl_ms": stats.p99_itl_s * 1e3,
+            "prefill_chunks": stats.prefill_chunks,
+        })
+    return out
+
+
 def run() -> list:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -182,9 +255,22 @@ def run() -> list:
             f"allocated_blocks={s['allocated_blocks']};"
             f"shim_transient_bytes={s['shim_transient_bytes']};"
             f"paged_transient_bytes={s['paged_transient_bytes']}"))
+
+    # long-prompt serving: TTFT + p99 inter-token latency, unchunked vs
+    # chunked prefill (gated columns — see module docstring)
+    serve_rows = serve_longprompt_bench()
+    for s in serve_rows:
+        rows.append(csv_row(
+            f"serve_longprompt_{s['name']}", s["us_per_tok"],
+            f"tok_per_s={s['tok_per_s']:.2f};ttft_ms={s['ttft_ms']:.1f};"
+            f"p99_ttft_ms={s['p99_ttft_ms']:.1f};"
+            f"p99_itl_ms={s['p99_itl_ms']:.2f};"
+            f"prefill_chunks={s['prefill_chunks']}"))
+
     os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
     with open(RESULTS_JSON, "w") as f:
-        json.dump({"tree_attention_paged_sweep": sweep, "csv_rows": rows},
+        json.dump({"tree_attention_paged_sweep": sweep,
+                   "serve_longprompt": serve_rows, "csv_rows": rows},
                   f, indent=2)
     print(f"wrote {os.path.normpath(RESULTS_JSON)}", flush=True)
     return rows

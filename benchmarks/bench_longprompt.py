@@ -1,0 +1,64 @@
+"""Long-prompt ragged serving: the head-of-line workload chunked prefill
+exists for (DESIGN.md §8).
+
+Every 4th request carries a prompt ~4x the stream mean, so under
+monolithic joins one prefill periodically stalls the whole pool for a
+step — visible as a p99 inter-token-latency spike on the OTHER requests.
+Each row serves the IDENTICAL stream through one engine configuration
+(hydra heads, async loop): ``cont``/``paged`` are the unchunked
+baselines, ``*_chunkN`` interleave N-token prefill chunks with decode
+steps.  The load-bearing comparison is ``p99_itl_ms`` (down with
+chunking) against ``tok_per_s`` (within noise): chunking trades nothing
+but scheduling.
+
+The CI-gated twin of this table (random-init weights, no checkpoints)
+lives in ``bench_kernels.py::serve_longprompt_bench`` and is pinned by
+``scripts/check_bench_regression.py`` against the committed baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (base_setup, csv_row, draft_setup,
+                               ragged_requests, serve_derived, timed_serve)
+from repro.core.trees import chain_tree
+from repro.serving.engine import PagedSpeculativeEngine, SpeculativeEngine
+
+BLOCK_SIZE = 16
+POOL_FRAC = 0.5
+SERVE_MAX_LEN = 512
+LONG_LEN = 384          # ~15x the short-prompt mean: prefill-dominated
+
+
+def _paged_kwargs(max_batch: int) -> dict:
+    usable = max(int(POOL_FRAC * max_batch * SERVE_MAX_LEN) // BLOCK_SIZE, 8)
+    return {"block_size": BLOCK_SIZE, "num_blocks": usable + 1}
+
+
+def run(max_batch: int = 4, n_req: int = 8, max_new_tokens: int = 24) -> list:
+    cfg, params, _ = base_setup()
+    c2, dp = draft_setup("hydra")
+    # chain speculation keeps the verify step small relative to a long
+    # prefill — the regime where the monolithic join's stall is visible
+    tree = chain_tree(4)
+    engines = [
+        ("cont", SpeculativeEngine, {}),
+        ("cont_chunk64", SpeculativeEngine, {"prefill_chunk": 64}),
+        ("cont_chunk128", SpeculativeEngine, {"prefill_chunk": 128}),
+        ("paged", PagedSpeculativeEngine, _paged_kwargs(max_batch)),
+        ("paged_chunk64", PagedSpeculativeEngine,
+         {**_paged_kwargs(max_batch), "prefill_chunk": 64}),
+    ]
+    rows = []
+    for name, engine_cls, ekw in engines:
+        reqs = ragged_requests(n_req, seed=0, min_len=16, max_len=32,
+                               max_new_tokens=max_new_tokens,
+                               long_every=4, long_len=LONG_LEN)
+        stats = timed_serve(engine_cls, params, dp, c2, tree, reqs,
+                            max_batch=max_batch, engine_kwargs=ekw)
+        rows.append(csv_row(f"longprompt_{name}",
+                            1e6 / max(stats.tokens_per_s, 1e-9),
+                            serve_derived(stats)))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -126,19 +126,32 @@ def timed_generate(params, dp, cfg, tree, prompts, *, max_new_tokens=48,
 
 
 def ragged_requests(n: int, *, seed: int = 0, min_len: int = 16,
-                    max_len: int = 32, max_new_tokens: int = 32):
+                    max_len: int = 32, max_new_tokens: int = 32,
+                    long_every: int = 0, long_len: int = 0):
     """A ragged serving workload: n requests with mixed prompt lengths and
     mixed budgets drawn deterministically from `seed` (so the continuous
-    and bucketed engines can be benchmarked on the identical stream)."""
+    and bucketed engines can be benchmarked on the identical stream).
+
+    ``long_every=k`` makes every k-th request a long prompt of
+    ``long_len`` tokens (>= 4x the stream mean) — the head-of-line
+    workload whose p99 inter-token latency chunked prefill targets
+    (DESIGN.md §8).  Long prompts wrap the eval rows to reach
+    ``long_len``."""
     from repro.serving.engine import Request
     _, _, pipe = base_setup()
     rs = np.random.RandomState(seed)
     toks = np.asarray(pipe.eval_batch(n))
-    return [Request(
-        prompt=toks[i, :rs.randint(min_len, max_len + 1)].astype(np.int32),
-        max_new_tokens=int(rs.randint(max(max_new_tokens // 2, 2),
-                                      max_new_tokens + 1)))
-        for i in range(n)]
+    reqs = []
+    for i in range(n):
+        plen = rs.randint(min_len, max_len + 1)
+        if long_every and i % long_every == 0:
+            plen = long_len or 4 * max_len
+        row = np.resize(toks[i], plen)          # wrap past the eval width
+        reqs.append(Request(
+            prompt=row.astype(np.int32),
+            max_new_tokens=int(rs.randint(max(max_new_tokens // 2, 2),
+                                          max_new_tokens + 1))))
+    return reqs
 
 
 def timed_serve(engine_cls, params, dp, cfg, tree, requests, *,
@@ -165,6 +178,13 @@ def serve_derived(stats) -> str:
     max_batch x max_len when any layer takes the per-layer gather
     fallback — windowed groups, MLA — or under the shim oracle).
 
+    Responsiveness columns (DESIGN.md §8): `ttft_ms`/`p99_ttft_ms` are
+    queue-to-first-token latency (mean / p99 across requests), and
+    `p99_itl_ms` the p99 inter-token gap across every served token — the
+    column a monolithic long-prompt prefill blows up (every active slot
+    stalls for the whole join) and chunked prefill repairs.  Chunked rows
+    additionally carry `prefill_chunks`/`prefill_tok`.
+
     Host-overlap columns (the async serve loop, DESIGN.md §7):
     `host_stall_ms` is the wall time host bookkeeping STARVED the device
     pipeline (host working with no step in flight — the serialization
@@ -179,10 +199,16 @@ def serve_derived(stats) -> str:
            f"slot_util={stats.slot_utilization:.3f};"
            f"mean_lat_ms={stats.mean_latency_s * 1e3:.1f};"
            f"p99_lat_ms={stats.p99_latency_s * 1e3:.1f};"
+           f"ttft_ms={stats.mean_ttft_s * 1e3:.1f};"
+           f"p99_ttft_ms={stats.p99_ttft_s * 1e3:.1f};"
+           f"p99_itl_ms={stats.p99_itl_s * 1e3:.2f};"
            f"host_stall_ms={stats.host_stall_s * 1e3:.1f};"
            f"stall_frac={stats.host_stall_frac:.3f};"
            f"read_wait_ms={stats.read_wait_s * 1e3:.1f};"
            f"inflight_peak={stats.steps_in_flight}")
+    if stats.prefill_chunks:
+        row += (f";prefill_chunks={stats.prefill_chunks}"
+                f";prefill_tok={stats.prefill_tokens}")
     if stats.pool_tokens:                    # paged engine: memory columns
         row += (f";kv_reserved_tok={stats.pool_tokens}"
                 f";kv_peak_tok={stats.peak_pool_tokens}"

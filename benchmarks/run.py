@@ -17,6 +17,7 @@ SECTIONS = [
     ("kernels", "benchmarks.bench_kernels"),
     ("fig2", "benchmarks.bench_fig2_throughput"),
     ("fig3", "benchmarks.bench_fig3_batch"),
+    ("longprompt", "benchmarks.bench_longprompt"),
     ("fig4", "benchmarks.bench_fig4_typical"),
     ("fig5", "benchmarks.bench_fig5_objectives"),
     ("fig6", "benchmarks.bench_fig6_prefix"),

@@ -20,8 +20,14 @@ job — when:
     loop on the hot path), not 10% jitter;
   * **parity drifted**: ``paged_vs_dense_max_err`` above an absolute
     ceiling (1e-3) — the paged kernel no longer computes the dense answer;
-  * a baseline sweep entry or kernel row **disappeared** — coverage must
-    never shrink silently.
+  * a **serving responsiveness column** regressed past tolerance: the
+    ``serve_longprompt`` section's ``ttft_ms`` / ``p99_itl_ms`` /
+    ``us_per_tok`` per engine row (unchunked vs chunked prefill on the
+    identical long-prompt ragged stream, DESIGN.md §8) — this is what
+    keeps the chunked-prefill p99 inter-token-latency win from silently
+    rotting;
+  * a baseline sweep entry, serve row, or kernel row **disappeared** —
+    coverage must never shrink silently.
 
 Refresh the baseline after an intentional change with ``--update-baseline``
 (or copy the fresh JSON over it) and commit the result.
@@ -38,6 +44,13 @@ TIMING_KEYS = ("dense_us", "shim_us", "paged_us")
 EXACT_KEYS = ("allocated_blocks", "shim_transient_bytes",
               "paged_transient_bytes", "step_transient_tokens_native",
               "step_transient_tokens_shim")
+SERVE_TIMING_KEYS = ("us_per_tok", "ttft_ms", "p99_itl_ms")
+# chunked rows must not INVERT the responsiveness win vs the unchunked
+# row of the SAME fresh run (absolute per-row drift alone can't catch
+# that: a chunked row 3x its own baseline may still pass while being
+# far worse than unchunked). Same-run comparison cancels machine speed;
+# the factor only absorbs scheduler noise.
+SERVE_RELATIVE_FACTOR = 1.5
 MAX_ERR_CEILING = 1e-3
 DEFAULT_TOL = float(os.environ.get("REPRO_BENCH_TOL", "3.0"))
 
@@ -89,6 +102,41 @@ def compare(fresh: dict, baseline: dict, tol: float = DEFAULT_TOL) -> list:
         if err > MAX_ERR_CEILING:
             bad.append(f"{tag}.paged_vs_dense_max_err: {err:.2e} > "
                        f"{MAX_ERR_CEILING:g} (paged/dense parity broken)")
+
+    fresh_serve = {e.get("name"): e
+                   for e in fresh.get("serve_longprompt", [])}
+    for base in baseline.get("serve_longprompt", []):
+        name = base.get("name")
+        tag = f"serve_longprompt[{name}]"
+        cur = fresh_serve.get(name)
+        if cur is None:
+            bad.append(f"{tag}: row missing from fresh results "
+                       f"(serving coverage shrank)")
+            continue
+        for k in SERVE_TIMING_KEYS:
+            if k in base and k not in cur:
+                bad.append(f"{tag}.{k}: column missing from fresh results")
+            elif k in base and base[k] > 0 and cur.get(k, 0.0) > base[k] * tol:
+                bad.append(f"{tag}.{k}: {cur[k]:.2f} > baseline "
+                           f"{base[k]:.2f} x tol {tol:g} "
+                           f"(long-prompt responsiveness regressed)")
+    # same-run relative check: the chunked rows' p99 ITL must not invert
+    # the win against the unchunked row (see SERVE_RELATIVE_FACTOR)
+    un = fresh_serve.get("unchunked")
+    if un and un.get("p99_itl_ms", 0) > 0:
+        for name, cur in fresh_serve.items():
+            # dense chunked rows only: the paged row's cost is the paged
+            # jnp path itself, not chunking — not comparable to the
+            # dense unchunked row
+            if not name.startswith("chunk") or "p99_itl_ms" not in cur:
+                continue
+            limit = un["p99_itl_ms"] * SERVE_RELATIVE_FACTOR
+            if cur["p99_itl_ms"] > limit:
+                bad.append(
+                    f"serve_longprompt[{name}].p99_itl_ms: "
+                    f"{cur['p99_itl_ms']:.2f} > unchunked "
+                    f"{un['p99_itl_ms']:.2f} x {SERVE_RELATIVE_FACTOR:g} "
+                    f"(chunked-prefill responsiveness win inverted)")
 
     fresh_rows = _csv_timings(fresh)
     for name, base_us in _csv_timings(baseline).items():

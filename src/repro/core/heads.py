@@ -74,18 +74,21 @@ def init_draft_params(key, cfg: ModelConfig):
 
 def prefix_forward(dp, cfg: ModelConfig, hidden, positions, *,
                    cache_k=None, cache_v=None, cache_len=None,
-                   tree_mask=None, block_table=None):
+                   tree_mask=None, block_table=None, prefill=False):
     """Extra decoder layer over the base model's hidden-state stream.
 
     hidden: (B, T, d). Full-seq (cache_* None) for training; cache path for
     decoding (chain mask by default).  ``block_table`` switches cache_k/v
     to the paged pool layout (same per-slot tables as the KV caches).
-    Returns (out, new_k, new_v)."""
+    ``prefill=True`` (with a cache) runs the chunked-prefill continuation
+    instead of the decode path: the T hiddens are one prompt chunk at
+    ``cache_len + arange(T)``, attended with the full-seq blocked math
+    (DESIGN.md §8).  Returns (out, new_k, new_v)."""
     p = dp["prefix"]
     ai = AttnInputs(q_pos=positions, cache_k=cache_k, cache_v=cache_v,
                     cache_len=cache_len, tree_mask=tree_mask,
                     window=jnp.int32(0), causal=True,
-                    block_table=block_table)
+                    block_table=block_table, prefill=prefill)
     a, nk, nv = gqa_fwd(p["attn"], cfg, rms_norm(hidden, p["norm1"],
                                                  cfg.rms_eps), ai)
     h = hidden + a

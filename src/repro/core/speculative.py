@@ -21,7 +21,8 @@ from repro.core.heads import (draft_tree_tokens, init_prefix_cache,
                               prefix_forward)
 from repro.core.verify import greedy_verify, typical_verify
 from repro.models.model import forward, init_cache
-from repro.serving.cache import commit_cache, commit_prefix_cache
+from repro.serving.cache import (ATTN_KEYS, commit_cache, commit_chunk,
+                                 commit_prefix_cache)
 
 PAD_TOKEN = -1
 
@@ -108,6 +109,22 @@ def init_pool_state(params, draft_params, cfg: ModelConfig, max_batch: int,
         prefix_k=pk, prefix_v=pv, rng=rng)
 
 
+def _first_token(params, cfg: ModelConfig, h_last, rng, greedy: bool):
+    """Sample the first token of a freshly prefilled request from the
+    hidden state of its last real prompt token.  Splits ``rng`` exactly
+    once per request (greedy consumes none of it, which is why scheduling
+    order can never perturb greedy streams)."""
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"])
+    last_logits = h_last.astype(jnp.float32) @ unembed.astype(jnp.float32)
+    rng, sub = jax.random.split(rng)
+    if greedy:
+        tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    else:
+        tok0 = jax.random.categorical(sub, last_logits).astype(jnp.int32)
+    return tok0, rng
+
+
 def join_slot(params, draft_params, cfg: ModelConfig, state: DecodeState,
               prompt, real_len, slot, *, greedy: bool = True) -> DecodeState:
     """Prefill one request and install it in row ``slot`` of the pool.
@@ -118,9 +135,10 @@ def join_slot(params, draft_params, cfg: ModelConfig, state: DecodeState,
     pad tail's cache entries sit beyond cache_len = real_len where every
     later verify step masks or overwrites them).  P is the only shape this
     function traces on, so an engine that buckets prompt lengths compiles
-    one join per bucket.  NOTE: architectures with recurrent state groups
-    (mamba/rwkv) must be called with real_len == P — a recurrent state
-    scanned over pad tokens is corrupted, there is nothing to mask.
+    one join per bucket.  Architectures with recurrent state groups
+    (mamba/rwkv) tolerate right-pad too since the length-masked scan
+    (``valid_len``, models/ssm.py): state is carried past pads unchanged,
+    so bucketed padding is legal for every arch.
 
     Async contract (DESIGN.md §7): this function performs no host reads —
     the first sampled token is *installed* in ``last_token[slot]`` rather
@@ -133,18 +151,12 @@ def join_slot(params, draft_params, cfg: ModelConfig, state: DecodeState,
     P = prompt.shape[0]
     pos = jnp.arange(P)[None, :]
     row_cache = init_cache(cfg, 1, _pool_max_len(state))
+    rl = jnp.reshape(real_len, (1,)).astype(jnp.int32)
     out = forward(params, cfg, prompt[None, :], pos, mode="full",
-                  cache=row_cache, want_logits=False)
+                  cache=row_cache, valid_len=rl, want_logits=False)
     idx = jnp.maximum(real_len - 1, 0)
     h_last = out.hidden[0, idx]
-    unembed = (params["embed"].T if cfg.tie_embeddings
-               else params["lm_head"])
-    last_logits = h_last.astype(jnp.float32) @ unembed.astype(jnp.float32)
-    rng, sub = jax.random.split(state.rng)
-    if greedy:
-        tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-    else:
-        tok0 = jax.random.categorical(sub, last_logits).astype(jnp.int32)
+    tok0, rng = _first_token(params, cfg, h_last, state.rng, greedy)
 
     h = h_last
     pk, pv = state.prefix_k, state.prefix_v
@@ -175,6 +187,115 @@ def _pool_max_len(state: DecodeState) -> int:
     if state.prefix_k is not None:
         return state.prefix_k.shape[1]
     return 1  # pure-SSM cache pytrees carry no sequence axis
+
+
+# ---------------------------------------------------------------------------
+# chunked (resumable) prefill — DESIGN.md §8
+# ---------------------------------------------------------------------------
+
+
+def join_slot_chunk(params, draft_params, cfg: ModelConfig,
+                    state: DecodeState, chunk, start, real_len, slot, *,
+                    final: bool, view_len: Optional[int] = None,
+                    greedy: bool = True) -> DecodeState:
+    """One chunk of a resumable prefill into row ``slot`` of the pool.
+
+    ``chunk``: (C,) int32 — tokens ``[start, start + C)`` of the request's
+    C-padded context; ``real_len`` is the true total context length (only
+    the final chunk may carry right-pad).  The chunk runs a prefill
+    *continuation* forward (``forward(mode='full', cache_len=start)``):
+    attention writes the chunk K/V at ``[start, start+C)`` and attends
+    with the same blocked full-seq math as a monolithic prefill,
+    recurrent state scans onward from the row's carried state — so a
+    prompt prefilled in chunks is byte-identical to one prefilled whole,
+    and chunking is pure scheduling.
+
+    Non-final chunks advance the prefill cursor (``cache_len[slot] =
+    start + C`` — the slot stays inactive, and any scratch a concurrent
+    decode step scribbles beyond the cursor is overwritten by the next
+    chunk) and leave token/hidden state untouched.  The final chunk
+    (``final=True`` — a second trace of the same C shape, so a chunked
+    engine compiles exactly two prefill executables regardless of prompt
+    length) gathers the hidden state of token ``real_len - 1``, samples
+    the request's first token, and installs
+    ``last_token``/``last_hidden``/``cache_len = real_len``, activating
+    the slot.  Same async contract as ``join_slot``: no host reads, the
+    sampled token is read back one step later at harvest.
+
+    ``view_len`` (static) truncates the attention view of the row cache
+    to its first ``view_len`` positions — it must cover ``start + C``.
+    A fully-masked tail is an exact no-op of the blocked attention, so
+    any covering extent yields identical bits; the engine picks the next
+    power of two above the prefill cursor, which keeps per-chunk
+    attention cost proportional to context actually written (instead of
+    O(max_len) per chunk) at the price of one extra trace per extent —
+    bounded by log2(max_len), independent of prompt lengths.
+    """
+    C = chunk.shape[0]
+    pos = (start + jnp.arange(C))[None, :]
+    start1 = jnp.reshape(start, (1,)).astype(jnp.int32)
+    valid = jnp.clip(real_len - start, 0, C)
+    view = slice(None, view_len)
+    # the FIRST chunk must scan from a zero recurrent state — the row
+    # still holds the slot's previous occupant's state (join_slot gets
+    # this for free by building a fresh row; stale attention entries need
+    # no reset, the kv_valid_len mask already hides them)
+    fresh = jnp.asarray(start) == 0
+
+    def _row_state(a):
+        row = a[:, slot][:, None]
+        return jnp.where(fresh, jnp.zeros_like(row), row)
+
+    row_cache = [{k: (a[:, slot][:, None, view] if k in ATTN_KEYS
+                      else _row_state(a))
+                  for k, a in g.items()} for g in state.cache]
+    out = forward(params, cfg, chunk[None, :], pos, mode="full",
+                  cache=row_cache, cache_len=start1,
+                  valid_len=jnp.reshape(valid, (1,)), want_logits=False)
+
+    # chunk-granular commit: attention rows move only [start, start+C);
+    # recurrent rows replace the carried state
+    new_cache = []
+    for gp, gr in zip(state.cache, out.cache):
+        g = {}
+        for key, arr in gp.items():
+            if key in ATTN_KEYS:
+                g[key] = commit_chunk(arr, gr[key], slot, start, C)
+            else:
+                g[key] = arr.at[:, slot].set(gr[key][:, 0].astype(arr.dtype))
+        new_cache.append(g)
+
+    h_seq = out.hidden
+    pk, pv = state.prefix_k, state.prefix_v
+    ph = None
+    if draft_params is not None and "prefix" in draft_params:
+        ph, nk, nv = prefix_forward(
+            draft_params, cfg, h_seq, pos,
+            cache_k=pk[slot][None, view], cache_v=pv[slot][None, view],
+            cache_len=start1, prefill=True)
+        pk = commit_chunk(pk, nk, slot, start, C, has_layer_axis=False)
+        pv = commit_chunk(pv, nv, slot, start, C, has_layer_axis=False)
+
+    if not final:
+        return DecodeState(
+            cache=new_cache,
+            cache_len=state.cache_len.at[slot].set(
+                (start + C).astype(jnp.int32)),
+            last_token=state.last_token, last_hidden=state.last_hidden,
+            prefix_k=pk, prefix_v=pv, rng=state.rng)
+
+    idx = jnp.clip(valid - 1, 0, C - 1)
+    h_last = h_seq[0, idx]
+    tok0, rng = _first_token(params, cfg, h_last, state.rng, greedy)
+    h = ph[0, idx] if ph is not None else h_last
+    return DecodeState(
+        cache=new_cache,
+        cache_len=state.cache_len.at[slot].set(
+            jnp.asarray(real_len).astype(jnp.int32)),
+        last_token=state.last_token.at[slot].set(tok0),
+        last_hidden=state.last_hidden.at[slot].set(
+            h.astype(state.last_hidden.dtype)),
+        prefix_k=pk, prefix_v=pv, rng=rng)
 
 
 # ---------------------------------------------------------------------------

@@ -39,7 +39,20 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt lengths in [prompt-len/2, prompt-len]")
+    ap.add_argument("--long-prompts", action="store_true",
+                    help="make every 4th request a long prompt (4x "
+                         "prompt-len, i.e. >= 4x the stream mean) — the "
+                         "head-of-line workload chunked prefill exists "
+                         "for (DESIGN.md §8)")
     ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: split every prompt into "
+                         "fixed-size chunks the scheduler interleaves "
+                         "with decode steps (0 = monolithic join; "
+                         "continuous/paged engines only)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prompt tokens co-scheduled per decode step "
+                         "(default: one chunk)")
     ap.add_argument("--engine", choices=("continuous", "paged", "bucketed"),
                     default="continuous")
     ap.add_argument("--sync", action="store_true",
@@ -75,23 +88,30 @@ def main() -> None:
 
     max_len = 512
     inflight = 1 if args.sync else 2
+    chunk_kw = {}
+    if args.prefill_chunk and args.engine != "bucketed":
+        chunk_kw = {"prefill_chunk": args.prefill_chunk,
+                    "prefill_budget": args.prefill_budget or None}
     if args.engine == "paged":
         usable = max(int(args.pool_frac * args.batch * max_len)
                      // args.block_size, 4)
         eng = PagedSpeculativeEngine(params, dp, cfg, tree, max_len=max_len,
                                      block_size=args.block_size,
-                                     num_blocks=usable + 1, inflight=inflight)
+                                     num_blocks=usable + 1, inflight=inflight,
+                                     **chunk_kw)
     elif args.engine == "continuous":
         eng = SpeculativeEngine(params, dp, cfg, tree, max_len=max_len,
-                                inflight=inflight)
+                                inflight=inflight, **chunk_kw)
     else:
         eng = BucketedEngine(params, dp, cfg, tree, max_len=max_len)
     rs = np.random.RandomState(0)
     n_requests = args.requests or args.batch
     reqs = []
-    for _ in range(n_requests):
+    for i in range(n_requests):
         plen = (rs.randint(max(args.prompt_len // 2, 1), args.prompt_len + 1)
                 if args.ragged else args.prompt_len)
+        if args.long_prompts and i % 4 == 0:
+            plen = 4 * args.prompt_len
         reqs.append(Request(
             prompt=rs.randint(0, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=args.max_new_tokens))
@@ -111,10 +131,16 @@ def main() -> None:
           f"util={stats.slot_utilization:.3f} "
           f"mean_lat={stats.mean_latency_s * 1e3:.1f}ms "
           f"p99_lat={stats.p99_latency_s * 1e3:.1f}ms "
+          f"ttft={stats.mean_ttft_s * 1e3:.1f}ms "
+          f"p99_itl={stats.p99_itl_s * 1e3:.1f}ms "
           f"host_stall={stats.host_stall_s * 1e3:.1f}ms "
           f"({stats.host_stall_frac:.0%} of wall) "
           f"read_wait={stats.read_wait_s * 1e3:.1f}ms "
           f"inflight_peak={stats.steps_in_flight}")
+    if stats.prefill_chunks:
+        print(f"[serve] chunked prefill: chunk={eng.prefill_chunk} "
+              f"budget={eng.prefill_budget} chunks={stats.prefill_chunks} "
+              f"prompt_tokens={stats.prefill_tokens}")
     if stats.pool_tokens:
         print(f"[serve] paged KV: pool={stats.pool_tokens} tok "
               f"(dense equivalent {stats.dense_equiv_tokens} tok, "

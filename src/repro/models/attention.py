@@ -10,6 +10,17 @@ Two execution modes:
   New KV entries are written at ``cache_len + arange(T)`` — the speculative
   scratch region; `commit` (serving/cache.py) compacts accepted entries.
 
+A third sub-mode rides the full-seq math: **prefill continuation**
+(``ai.prefill``, DESIGN.md §8 chunked prefill).  T chunk tokens at
+absolute positions ``cache_len + arange(T)`` are persisted into the cache
+exactly like a verify write, but attention then runs the SAME
+``blocked_attention`` the whole-prompt prefill uses — over the cache view
+with trailing positions masked by ``kv_valid_len`` — instead of the
+verify path's plain-softmax ``masked_attention``.  Sharing the primitive
+is what keeps chunked prefill byte-identical to the monolithic one: a
+fully-masked trailing region is an exact no-op of the online softmax, so
+the per-token math cannot depend on how the prompt was chunked.
+
 The verify path speaks two cache layouts (DESIGN.md §6):
 
 * dense: ``cache_k``/``cache_v`` are per-slot (B, S, ...) arrays in
@@ -52,6 +63,8 @@ class AttnInputs(NamedTuple):
     block_table: Optional[jnp.ndarray] = None   # (B, M) int32 => pool layout
     paged_kernel: bool = True          # static: False forces the jnp
     #                                    fallback (windowed groups)
+    prefill: bool = False              # static: cache + prefill => chunked
+    #                                    prefill continuation (full-seq math)
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +111,13 @@ def gqa_fwd(p, cfg, x, ai: AttnInputs):
         kv_pos = ai.q_pos[0]  # assumes aligned positions across batch
         out = blocked_attention(q, k, v, ai.q_pos, kv_pos,
                                 window=ai.window, causal=ai.causal)
+    elif ai.prefill:
+        # chunked-prefill continuation: persist the chunk K/V at
+        # [cache_len, cache_len+T), then run the SAME blocked attention
+        # the whole-prompt prefill uses over the cache view — the masked
+        # tail beyond cache_len+T is an exact online-softmax no-op, which
+        # is what keeps chunked == unchunked byte-identical (§8)
+        out, k, v = _prefill_continuation(q, k, v, ai)
     elif ai.block_table is not None:
         # paged verify: scatter scratch through the table, stream the pool
         out, k, v = _paged_verify_gqa(q, k, v, ai)
@@ -113,6 +133,48 @@ def gqa_fwd(p, cfg, x, ai: AttnInputs):
         k, v = ck, cv  # return updated full cache
     out = out.reshape(B, T, cfg.n_heads_padded * hd)
     return out @ p["wo"], k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill continuation (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _cache_write(cache_k, cache_v, k, v, ai: AttnInputs):
+    """Persist T new per-token entries at logical [cache_len, cache_len+T)
+    and return (updated_k, updated_v, k_view, v_view): the updated cache
+    arrays in their own layout, plus the (B, S)-shaped logical view
+    attention consumes.  Dense caches are their own view; pool-layout
+    caches scatter through the block table and gather ONE layer's view
+    (the per-layer transient, never the all-layer shim)."""
+    B, T = k.shape[:2]
+    if ai.block_table is not None:
+        ck = _paged_scatter(cache_k, k, ai.cache_len, ai.block_table)
+        cv = _paged_scatter(cache_v, v, ai.cache_len, ai.block_table)
+        k_view, _ = _paged_gather_layer(ck, ai.block_table)
+        v_view, _ = _paged_gather_layer(cv, ai.block_table)
+        return ck, cv, k_view, v_view
+    slot = ai.cache_len[:, None] + jnp.arange(T)[None, :]            # (B,T)
+    bidx = jnp.arange(B)[:, None]
+    ck = cache_k.at[bidx, slot].set(k.astype(cache_k.dtype))
+    cv = cache_v.at[bidx, slot].set(v.astype(cache_v.dtype))
+    return ck, cv, ck, cv
+
+
+def _prefill_continuation(q, k, v, ai: AttnInputs):
+    """One chunk of a resumable prefill: write K/V, then full-seq blocked
+    attention over the cache view.  Positions at or beyond
+    ``cache_len + T`` (stale verify scratch, later chunks' zeros, NULL
+    garbage) are masked via ``kv_valid_len``; right-pad inside the chunk
+    needs no extra mask — pads sit after every real query, so causality
+    already hides them."""
+    T = q.shape[1]
+    ck, cv, k_view, v_view = _cache_write(ai.cache_k, ai.cache_v, k, v, ai)
+    S = k_view.shape[1]
+    out = blocked_attention(q, k_view, v_view, ai.q_pos, jnp.arange(S),
+                            window=ai.window, causal=ai.causal,
+                            kv_valid_len=ai.cache_len + T)
+    return out, ck, cv
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +312,28 @@ def mla_fwd(p, cfg, x, ai: AttnInputs):
                                 scale=scale)
         out = out.reshape(B, T, H * vd)
         return out @ p["wo"], c_kv, k_rope
+
+    if ai.prefill:
+        # chunked-prefill continuation: persist the chunk latents, expand
+        # the WHOLE cached latent view to full K/V and run the same
+        # blocked attention as the full-prefill path (not the absorbed
+        # decode math) — chunking must not change which formulation
+        # computed a prompt token's hidden state
+        new_k, new_v, ckv_view, krope_view = _cache_write(
+            ai.cache_k, ai.cache_v, c_kv, k_rope, ai)
+        S = ckv_view.shape[1]
+        k_nope = (ckv_view @ p["w_uk"]).reshape(B, S, H, nd)
+        v_full = (ckv_view @ p["w_uv"]).reshape(B, S, H, vd)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_view[:, :, None, :],
+                                      (B, S, H, rd))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = blocked_attention(q_full, k_full, v_full, ai.q_pos,
+                                jnp.arange(S), window=ai.window,
+                                causal=ai.causal, scale=scale,
+                                kv_valid_len=ai.cache_len + T)
+        out = out.reshape(B, T, H * vd)
+        return out @ p["wo"], new_k, new_v
 
     # decode/verify: absorbed attention against the latent cache
     if ai.block_table is not None:

@@ -29,8 +29,9 @@ from repro.models.attention import (AttnInputs, gqa_fwd, init_gqa, init_mla,
                                     mla_fwd)
 from repro.models.layers import embed_init, init_mlp, mlp_fwd, rms_norm
 from repro.models.moe import init_moe, moe_fwd
-from repro.models.ssm import (init_mamba2, init_rwkv6, mamba2_fwd,
-                              mamba2_dims, rwkv6_chanmix, rwkv6_timemix)
+from repro.models.ssm import (_gather_last_valid, init_mamba2, init_rwkv6,
+                              mamba2_fwd, mamba2_dims, rwkv6_chanmix,
+                              rwkv6_timemix)
 
 
 class ModelOutputs(NamedTuple):
@@ -236,12 +237,21 @@ def paged_kernel_covers(cfg: ModelConfig, offset: int = 0,
 
 def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
             cache=None, cache_len=None, tree_mask=None, block_table=None,
-            want_logits: bool = True):
+            valid_len=None, want_logits: bool = True):
     """inputs: (B,T) int tokens, or (B,T,d) embeddings (audio frontend stub).
 
     mode='full':  causal (or bidirectional for encoder_only) over T tokens.
                   If `cache` is given, it is filled at positions [0, T)
-                  (prefill) and returned.
+                  (prefill) and returned.  Passing `cache_len` (B,) as
+                  well switches to **prefill continuation** (DESIGN.md
+                  §8): the T tokens are one CHUNK at absolute positions
+                  `cache_len + arange(T)`; attention groups write the
+                  chunk K/V into the populated cache and attend with the
+                  same blocked full-seq math as plain prefill (masked past
+                  `cache_len + T`), recurrent groups scan onward from the
+                  cached state.  `block_table` is honored here too, so a
+                  paged chunk writes token-granular through the table
+                  (no dense join strip).
     mode='verify': T speculative tokens against the populated cache;
                   `cache_len` (B,) is the committed length; `tree_mask`
                   (T,T) ancestor mask (None => chain / plain decode).
@@ -250,12 +260,19 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
                   block pools `(L, num_blocks, block_size, ...)` streamed
                   through the table by the native paged tree-attention
                   kernel (recurrent-state groups stay dense per-slot and
-                  ignore the table).  Verify-only: paged prefill goes
-                  through the per-slot join shim (serving/paged.py).
+                  ignore the table).
+
+    `valid_len` (B,), full mode only: true number of non-pad tokens among
+    the T inputs.  Attention needs no masking for right-pads (causality
+    hides them); recurrent-state groups length-mask their scan so state
+    is carried past pads unchanged and final states are taken at
+    `valid_len - 1` (models/ssm.py) — this is what lets bucketed/chunked
+    prefill pad mamba2/rwkv6 prompts.
     """
     assert mode in ("full", "verify")
-    assert block_table is None or mode == "verify", \
-        "paged layout is a verify-path feature; prefill uses the join shim"
+    is_chunk = mode == "full" and cache is not None and cache_len is not None
+    assert block_table is None or mode == "verify" or is_chunk, \
+        "paged layout needs verify mode or a prefill continuation"
     B, T = inputs.shape[:2]
     if inputs.ndim == 2:
         h = params["embed"][inputs]
@@ -291,14 +308,15 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
                 lp, win, ck, cv = xs
                 ai = AttnInputs(
                     q_pos=positions, cache_k=ck, cache_v=cv,
-                    cache_len=cache_len if is_verify else None,
-                    tree_mask=tree_mask, window=win, causal=causal,
-                    block_table=block_table if is_verify else None,
-                    paged_kernel=pk_ok)
+                    cache_len=cache_len,
+                    tree_mask=tree_mask if is_verify else None,
+                    window=win, causal=causal,
+                    block_table=block_table,
+                    paged_kernel=pk_ok, prefill=is_chunk)
                 h, nk, nv, aux_l = _attn_layer_fwd(lp, cfg, h, ai, moe_ffn)
                 return (h, aux + aux_l), (nk, nv)
 
-            if is_verify:
+            if is_verify or is_chunk:
                 xs = (gp, windows, gc["k"], gc["v"])
                 (h, aux_total), (nk, nv) = jax.lax.scan(
                     body, (h, aux_total), xs)
@@ -338,11 +356,12 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
         elif kind == "shared_attn":
             sp = params["shared_attn"]
             win = jnp.int32(0)
-            if is_verify:
+            if is_verify or is_chunk:
                 ai = AttnInputs(q_pos=positions, cache_k=gc["k"][0],
                                 cache_v=gc["v"][0], cache_len=cache_len,
-                                tree_mask=tree_mask, window=win, causal=True,
-                                block_table=block_table)
+                                tree_mask=tree_mask if is_verify else None,
+                                window=win, causal=True,
+                                block_table=block_table, prefill=is_chunk)
                 h, nk, nv, _ = _attn_layer_fwd(sp, cfg, h, ai, moe_ffn=False)
                 new_cache.append({"k": nk[None], "v": nv[None]})
             else:
@@ -360,12 +379,14 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
 
         elif kind == "mamba_stack":
             mmode = "verify" if is_verify else "full"
+            vlen = None if is_verify else valid_len
 
             def mbody(h, xs):
                 lp, ssd0, conv0 = xs
                 x2 = rms_norm(h, lp["norm"], cfg.rms_eps)
                 y, ns = mamba2_fwd(lp["mamba"], cfg, x2, mode=mmode,
-                                   ssd_state=ssd0, conv_state=conv0)
+                                   ssd_state=ssd0, conv_state=conv0,
+                                   valid_len=vlen)
                 return h + y, (ns["ssd_state"], ns["conv_win"])
 
             ssd0 = gc["ssd_state"] if gc is not None else jnp.zeros(
@@ -380,18 +401,24 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
 
         elif kind == "rwkv_stack":
             rmode = "verify" if is_verify else "full"
+            vlen = None if is_verify else valid_len
+            # the inner scan chunk is config-driven so a chunked prefill
+            # can align its chunk size to it (state-update grouping — and
+            # therefore the bits — then match the monolithic scan, §8)
+            rchunk = cfg.ssm.chunk_size if cfg.ssm else 64
 
             def rbody(h, xs):
                 lp, wkv0, stm0, scm0 = xs
                 x1 = rms_norm(h, lp["norm1"], cfg.rms_eps)
                 o, ns = rwkv6_timemix(lp["rwkv"], cfg, x1, mode=rmode,
-                                      wkv_state=wkv0, shift_last=stm0)
+                                      wkv_state=wkv0, shift_last=stm0,
+                                      chunk=rchunk, valid_len=vlen)
                 h = h + o
                 x2 = rms_norm(h, lp["norm2"], cfg.rms_eps)
                 cm = rwkv6_chanmix(lp["rwkv"], x2, shift_last=scm0)
                 h = h + cm
                 if rmode == "full":
-                    new_scm = x2[:, -1:]
+                    new_scm = _gather_last_valid(x2, vlen)
                 else:
                     new_scm = x2[:, :, None, :]       # per-token candidates
                 return h, (ns["wkv_state"], ns["shift_tm"], new_scm)

@@ -20,6 +20,19 @@ import jax.numpy as jnp
 
 from repro.models.layers import dense_init, init_mlp, mlp_fwd
 
+# Expert capacity is computed from the token count rounded UP to this
+# multiple.  Why: capacity used to scale with the raw static token count
+# N = B*T, so the SAME prompt prefilled exact-length (N = P, serial
+# generate) vs bucket-padded (N = pad(P), engine join) got DIFFERENT
+# capacities — different tokens overflowed, and a real token's routed
+# contribution changed by a whole expert output (|Δlogits| ~ 0.5 on the
+# deepseek-MLA reduced config; the "MLA bucketed-prefill divergence" was
+# never an attention near-tie, see tests/test_mla_prefill.py).  Rounding
+# the capacity basis makes C invariant to right-padding for every bucket
+# that divides 64 (all of ours are powers of two <= 64), which restores
+# greedy byte-parity between exact and padded prefill.
+CAPACITY_ROUND = 64
+
 
 def init_moe(key, cfg, dtype):
     mo = cfg.moe
@@ -58,7 +71,11 @@ def moe_fwd(p, cfg, x, *, capacity_factor: float = 1.25):
     aux = E * jnp.sum(me * ce) * mo.router_aux_coef
 
     # ---- capacity assignment via one cumsum over one-hot -------------------
-    C = int(max(8, (N * K * capacity_factor) // E))
+    # pad-invariant capacity (see CAPACITY_ROUND): right-pad tokens rank
+    # AFTER every real token in the cumsum, so with equal C they can
+    # never displace a real token from its expert slot
+    n_cap = -(-N // CAPACITY_ROUND) * CAPACITY_ROUND
+    C = int(max(8, (n_cap * K * capacity_factor) // E))
     flat_e = top_e.reshape(N * K)
     onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (NK, E)
     pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)         # rank within expert

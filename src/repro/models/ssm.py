@@ -28,6 +28,37 @@ from repro.models.layers import dense_init, group_norm, rms_norm
 LOG_DECAY_CLAMP = -20.0  # per-chunk cumulative log-decay clamp (see DESIGN)
 
 
+def _pad_mask(valid_len, B, T):
+    """(B, T) bool: position < valid_len.  None => all valid."""
+    if valid_len is None:
+        return None
+    return jnp.arange(T)[None, :] < valid_len[:, None]
+
+
+def _mask_decay_inputs(mask, w_log, k):
+    """Length-masked scan (DESIGN.md §8): force log-decay 0 (decay 1) and
+    key 0 at right-pad positions, so the recurrent state is carried past
+    pads UNCHANGED — the same trick the chunked scans already use for
+    their own chunk-multiple padding, so a masked pad tail is bitwise
+    indistinguishable from tail padding and bucketed/chunked prefill
+    stays byte-exact for recurrent archs."""
+    if mask is None:
+        return w_log, k
+    m = mask[..., None] if k.ndim == 3 else mask[:, :, None, None]
+    mw = mask[..., None] if w_log.ndim == 3 else mask[:, :, None, None]
+    return jnp.where(mw, w_log, 0.0), jnp.where(m, k, 0.0)
+
+
+def _gather_last_valid(x, valid_len):
+    """x: (B, T, ...) -> (B, 1, ...) at per-row index valid_len - 1
+    (plain ``x[:, -1:]`` when valid_len is None)."""
+    if valid_len is None:
+        return x[:, -1:]
+    idx = jnp.clip(valid_len - 1, 0, x.shape[1] - 1)
+    idx = idx.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
 # ---------------------------------------------------------------------------
 # decay linear attention primitives
 # ---------------------------------------------------------------------------
@@ -256,12 +287,18 @@ def _causal_conv(x, w, b, conv_state=None):
 
 
 def mamba2_fwd(p, cfg, x, *, mode: str, ssd_state=None, conv_state=None,
-               chunk: int | None = None):
+               chunk: int | None = None, valid_len=None):
     """mode: 'full' (train/prefill, chunked) | 'verify' (per-token states).
 
     Returns (out, new_states) where new_states =
       full:   {'ssd_state': (B,H,dk,dv) final, 'conv_win': (B,W-1,C) final}
       verify: {'ssd_state': (B,T,H,dk,dv), 'conv_win': (B,T,W-1,C)} per token
+
+    ``valid_len`` (B,), full mode only: right-pad positions >= valid_len
+    are length-masked out of the scan (decay 1, key 0 — state carried past
+    pads unchanged) and the returned final states are those after token
+    ``valid_len - 1``, which is what lets bucketed/chunked prefill pad
+    recurrent archs (DESIGN.md §8).
     """
     s = cfg.ssm
     d_in, H, conv_ch = mamba2_dims(cfg)
@@ -286,11 +323,14 @@ def mamba2_fwd(p, cfg, x, *, mode: str, ssd_state=None, conv_state=None,
 
     if mode == "full":
         # grouped SSD: B/C shared across heads — never broadcast (perf)
+        w_m, B_m = _mask_decay_inputs(_pad_mask(valid_len, B, T),
+                                      w_scalar, Bmat.astype(jnp.float32))
         o, final_state = mamba2_ssd_chunked(
-            Cmat.astype(jnp.float32), Bmat.astype(jnp.float32), v, w_scalar,
+            Cmat.astype(jnp.float32), B_m, v, w_m,
             initial_state=ssd_state, chunk=chunk or s.chunk_size)
         new_states = {"ssd_state": final_state,
-                      "conv_win": conv_windows[:, -1]}
+                      "conv_win": _gather_last_valid(conv_windows,
+                                                     valid_len)[:, 0]}
     else:
         # per-token scan (T small): post-update readout o_t = C_t . h_t
         w_log = w_scalar[..., None]                       # (B,T,H,1)
@@ -354,7 +394,10 @@ def _token_shift(x, last):
 
 
 def rwkv6_timemix(p, cfg, x, *, mode: str, wkv_state=None, shift_last=None,
-                  chunk: int = 64):
+                  chunk: int = 64, valid_len=None):
+    """``valid_len`` (B,), full mode only: length-mask the wkv scan past
+    right-pads and take the shift state at ``valid_len - 1`` (see
+    ``mamba2_fwd``)."""
     B, T, d = x.shape
     H = cfg.n_heads
     hd = d // H
@@ -378,10 +421,12 @@ def rwkv6_timemix(p, cfg, x, *, mode: str, wkv_state=None, shift_last=None,
     w_log = w_log.reshape(B, T, H, hd)
 
     if mode == "full":
+        w_m, k_m = _mask_decay_inputs(_pad_mask(valid_len, B, T), w_log, k)
         o, final_state = decay_attention_chunked(
-            r, k, v, w_log, u=p["u_bonus"], initial_state=wkv_state,
+            r, k_m, v, w_m, u=p["u_bonus"], initial_state=wkv_state,
             chunk=chunk)
-        new = {"wkv_state": final_state, "shift_tm": x[:, -1:]}
+        new = {"wkv_state": final_state,
+               "shift_tm": _gather_last_valid(x, valid_len)}
     else:
         o, states = decay_attention_seq(r, k, v, w_log, u=p["u_bonus"],
                                         initial_state=wkv_state)

@@ -28,9 +28,35 @@ scratch blocks, O(B·D1) touched entries, no dense view in between.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 ATTN_KEYS = {"k", "v"}
+
+
+def commit_chunk(pool, row, slot, start, length: int, *,
+                 has_layer_axis: bool = True):
+    """Chunk-granular prefill commit (DESIGN.md §8): copy the region
+    ``[start, start + length)`` of a per-slot row cache back into the
+    dense pool at row ``slot``.
+
+    pool: (L, B, S, ...); row: (L, 1, S, ...) — the slot's strip after a
+    ``forward`` prefill-continuation chunk (``has_layer_axis=False`` for
+    the un-stacked Hydra++ prefix cache, (B, S, ...)).  Only the chunk's
+    positions move (an O(length) dynamic-slice pair, not an O(S)
+    whole-row scatter), so per-chunk commit traffic is proportional to
+    the chunk, and the positions an interleaved decode step may have
+    scribbled on beyond the prefill cursor are exactly the ones the next
+    chunk overwrites.  Like every commit this is traced code: no host
+    reads, no data-dependent branching (the async contract, see module
+    docstring)."""
+    if not has_layer_axis:
+        pool, row = pool[None], row[None]
+    piece = jax.lax.dynamic_slice_in_dim(row[:, 0], start, length, axis=1)
+    idx = (jnp.int32(0), slot, start) + (jnp.int32(0),) * (pool.ndim - 3)
+    out = jax.lax.dynamic_update_slice(
+        pool, piece[:, None].astype(pool.dtype), idx)
+    return out if has_layer_axis else out[0]
 
 
 def _commit_attn(arr, cache_len, path_nodes, *, has_layer_axis: bool,

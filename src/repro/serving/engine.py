@@ -25,8 +25,24 @@ restores the fully synchronous loop.  The overlap reorders host
 bookkeeping only — never device math — so greedy outputs are byte-exact
 across ``inflight`` settings (a tested invariant).  Requests arrive
 through a live queue: ``submit()`` enqueues at any time (including
-mid-serve, from a ``source`` callable/generator handed to ``serve``) and
-``drain()`` serves whatever has been submitted.
+mid-serve, from a ``source`` callable/generator handed to ``serve`` —
+pulled by a background feeder thread through a bounded handoff queue,
+so a slow source can never stall the dispatch path) and ``drain()``
+serves whatever has been submitted.
+
+**Chunked prefill** (DESIGN.md §8, ``prefill_chunk > 0``): instead of
+one monolithic ``join_slot`` stalling every active slot for a long
+prompt's whole prefill, prompts stream in fixed-size chunks the
+scheduler interleaves with decode steps — at most ``prefill_budget``
+prompt tokens co-scheduled per step.  Slots pass through joining →
+prefilling → active; only the final chunk samples the request's first
+token and activates the slot.  Chunking is pure scheduling: greedy
+output is byte-identical to the unchunked engine and to serial
+``generate()`` at any chunk size (tested for dense, paged, and
+recurrent archs).  Caveat for MoE archs: expert-capacity overflow is
+resolved per forward call, so a chunk boundary can change which tokens
+drop once routing exceeds capacity — byte-parity there holds only
+while routing stays under capacity (DESIGN.md §8).
 
 ``PagedSpeculativeEngine`` — the same scheduler over a paged KV cache
 (``serving/paged.py``, DESIGN.md §6).  Attention caches live in a global
@@ -47,6 +63,8 @@ measurable.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -61,10 +79,30 @@ from repro.configs.base import ModelConfig
 from repro.models.model import paged_kernel_covers
 from repro.core.speculative import (autoregressive_step, init_decode_state,
                                     init_pool_state, join_slot,
-                                    max_emitted_per_step, spec_decode_step)
+                                    join_slot_chunk, max_emitted_per_step,
+                                    spec_decode_step)
 from repro.serving.paged import (NULL_BLOCK, BlockAllocator, init_paged_state,
                                  paged_autoregressive_step, paged_join_slot,
-                                 paged_spec_decode_step)
+                                 paged_join_slot_chunk, paged_spec_decode_step)
+
+# feeder-thread end-of-stream marker (see SpeculativeEngine._feed_source)
+_SOURCE_DONE = object()
+
+
+def _snapshot(host_array: np.ndarray):
+    """Device operand from a MUTABLE host array, copy-guaranteed.
+
+    ``jnp.asarray`` of an aligned numpy array can be ZERO-COPY on the CPU
+    backend — the device buffer then aliases the live numpy memory, and a
+    host mutation (harvest clearing an ``active`` bit, the allocator
+    rewriting a block-table row) races with any still-executing dispatch
+    that took the "snapshot".  Whether a given array aliases depends on
+    its heap alignment, which is why the resulting corruption was a
+    per-process coin flip.  Copying on the host first guarantees the
+    device operand is frozen at dispatch time, which is what the async
+    loop's correctness argument (DESIGN.md §7 "snapshotted per
+    dispatch") requires."""
+    return jnp.asarray(host_array.copy())
 
 
 @dataclass
@@ -86,6 +124,8 @@ class Request:
     # serving timeline (wall-clock seconds, filled in by the engine)
     t_enqueue: Optional[float] = None
     t_join: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_last_emit: Optional[float] = None
     t_done: Optional[float] = None
 
     @property
@@ -94,6 +134,13 @@ class Request:
         if self.t_done is None or self.t_enqueue is None:
             return None
         return self.t_done - self.t_enqueue
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Queue-to-first-token latency (None until the first token)."""
+        if self.t_first_token is None or self.t_enqueue is None:
+            return None
+        return self.t_first_token - self.t_enqueue
 
 
 @dataclass
@@ -162,6 +209,17 @@ class EngineStats:
     active_slot_steps: int = 0
     capacity_slot_steps: int = 0
     request_latency_s: List[float] = field(default_factory=list)
+    # responsiveness: queue-to-first-token per request, and per-token
+    # inter-token gaps (a harvest delivering n tokens after gap g
+    # contributes n samples of g/n — burst emissions don't hide stalls).
+    # p99_itl_s is the tail the chunked-prefill scheduler exists to fix:
+    # a monolithic long-prompt join stalls EVERY active slot for one
+    # prefill, which lands here as a fleet-wide gap spike (DESIGN.md §8)
+    ttft_s: List[float] = field(default_factory=list)
+    itl_s: List[float] = field(default_factory=list)
+    # chunked-prefill accounting (zero when prefill_chunk is off)
+    prefill_chunks: int = 0
+    prefill_tokens: int = 0
     # paged-KV accounting (zero when the cache is dense)
     block_size: int = 0
     num_blocks: int = 0
@@ -200,6 +258,24 @@ class EngineStats:
         return float(np.percentile(lat, 99)) if lat else 0.0
 
     @property
+    def mean_ttft_s(self) -> float:
+        return float(np.mean(self.ttft_s)) if self.ttft_s else 0.0
+
+    @property
+    def p99_ttft_s(self) -> float:
+        return float(np.percentile(self.ttft_s, 99)) if self.ttft_s else 0.0
+
+    @property
+    def mean_itl_s(self) -> float:
+        return float(np.mean(self.itl_s)) if self.itl_s else 0.0
+
+    @property
+    def p99_itl_s(self) -> float:
+        """p99 inter-token latency across every served token — the
+        long-prompt head-of-line metric (see the field comment)."""
+        return float(np.percentile(self.itl_s, 99)) if self.itl_s else 0.0
+
+    @property
     def peak_pool_tokens(self) -> int:
         """High-water mark of cache positions actually backed by blocks."""
         return self.peak_blocks_in_use * self.block_size
@@ -234,9 +310,29 @@ class _StepRecord(NamedTuple):
     max_batch: int
 
 
+@dataclass
+class _PrefillJob:
+    """Host-side progress of one chunked prefill (slot state 'prefilling',
+    DESIGN.md §8).  ``ctx`` is the request's context (prompt + any
+    resumed output) right-padded to a chunk multiple; ``off`` is the
+    prefill cursor — tokens already dispatched to the device.  The device
+    mirror of ``off`` is ``cache_len[slot]``, which the chunk updates so
+    concurrent decode steps scribble their dead-row scratch *ahead* of
+    the cursor (where the next chunk overwrites it), never behind."""
+
+    request: "Request"
+    ctx: np.ndarray
+    real_len: int
+    off: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.off >= len(self.ctx)
+
+
 # A live request source for ``serve``: an iterable (pulled lazily as slot
 # capacity frees up; exhaustion ends the stream) or a zero-arg callable
-# polled every loop iteration (returns newly arrived requests, an empty
+# polled by the feeder thread (returns newly arrived requests, an empty
 # iterable for "nothing yet, keep serving", or None for "no more ever").
 RequestSource = Union[Iterable["Request"], Callable[[], Any]]
 
@@ -270,6 +366,24 @@ class _EngineBase:
 
     def _run_step(self, state, active=None):
         return self._step(self.params, self.draft_params, state, active)
+
+    def _note_emission(self, r: "Request", appended: int) -> None:
+        """Inter-token-latency samples for one emission batch: a gap of g
+        seconds delivering n tokens contributes n samples of g/n, so
+        speculative bursts don't mask scheduler stalls between them."""
+        now = time.time()
+        if r.t_last_emit is not None:
+            gap = (now - r.t_last_emit) / appended
+            self.stats.itl_s.extend([gap] * appended)
+        r.t_last_emit = now
+
+    def _note_first_token(self, r: "Request") -> None:
+        now = time.time()
+        if r.t_first_token is None:
+            r.t_first_token = now
+            if r.t_enqueue is not None:
+                self.stats.ttft_s.append(now - r.t_enqueue)
+        r.t_last_emit = now
 
 
 class SpeculativeEngine(_EngineBase):
@@ -310,9 +424,11 @@ class SpeculativeEngine(_EngineBase):
 
     ``prefill_bucket`` rounds prompt lengths up before the per-slot
     prefill so the number of compiled join functions is bounded (one per
-    bucket).  Architectures with recurrent state groups (mamba/rwkv)
-    force exact-length prefill — a recurrent state scanned over right-pad
-    tokens would be corrupted (see ``join_slot``).
+    bucket) — for every arch: recurrent state groups (mamba/rwkv) ride
+    the length-masked scan, which carries state past right-pad tokens
+    unchanged (models/ssm.py, DESIGN.md §8).  With ``prefill_chunk`` the
+    bucket is the chunk instead, and prompts prefill incrementally
+    through the joining → prefilling → active slot lifecycle (§8).
 
     Subclass hooks (``_admit`` / ``_before_step`` / ``_release`` /
     ``_advance`` / ``_post_serve``) are no-ops here; the paged engine
@@ -321,26 +437,71 @@ class SpeculativeEngine(_EngineBase):
     """
 
     def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
-                 prefill_bucket: int = 32, inflight: int = 2, **kw):
+                 prefill_bucket: int = 32, prefill_chunk: int = 0,
+                 prefill_budget: Optional[int] = None, inflight: int = 2,
+                 **kw):
         super().__init__(params, draft_params, cfg, tree, **kw)
-        self.prefill_bucket = (1 if cfg.block_kind in ("mamba2", "rwkv6")
-                               else max(int(prefill_bucket), 1))
+        # the length-masked recurrent scan (models/ssm.py) carries state
+        # past right-pads unchanged, so bucketed padding is legal for
+        # mamba2/rwkv6 too — no more one-compile-per-prompt-length
+        self.prefill_bucket = max(int(prefill_bucket), 1)
+        # chunked prefill (DESIGN.md §8): 0 = monolithic join (legacy).
+        # Recurrent archs round the chunk up to the inner scan chunk so a
+        # chunk boundary is always an inner-chunk boundary — the scan's
+        # state grouping (hence the bits) then matches the monolithic run.
+        prefill_chunk = int(prefill_chunk or 0)
+        if prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0: {prefill_chunk}")
+        if prefill_chunk and cfg.block_kind in ("mamba2", "rwkv6"):
+            inner = cfg.ssm.chunk_size if cfg.ssm else 64
+            prefill_chunk = -(-prefill_chunk // inner) * inner
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk:
+            self.prefill_budget = int(prefill_budget or prefill_chunk)
+            if self.prefill_budget < prefill_chunk:
+                raise ValueError(
+                    f"prefill_budget {self.prefill_budget} < prefill_chunk "
+                    f"{prefill_chunk}: the scheduler could never dispatch "
+                    f"a chunk")
+        else:
+            self.prefill_budget = 0
         if inflight < 1:
             raise ValueError(f"inflight must be >= 1: {inflight}")
         self.inflight = int(inflight)
         self._queue: deque = deque()
         self._inflight: deque = deque()
         self._live_joins: dict = {}          # slot -> (Request, last_token)
+        self._prefills: dict = {}            # slot -> _PrefillJob
+        # does the chunk attention view grow with the prefill cursor?
+        # Pure-recurrent archs without a Hydra++ prefix cache carry no
+        # sequence-axis cache at all — one full-extent trace suffices
+        from repro.models.model import group_program
+        self._view_grows = (
+            any(k.startswith("attn") or k == "shared_attn"
+                for k, _ in group_program(cfg))
+            or (draft_params is not None and "prefix" in draft_params))
         greedy = self.criterion == "greedy"
         # jit retraces per padded prompt shape, i.e. one compile per bucket
         self._join_fn = jax.jit(
             lambda p, dp, st, prompt, rl, slot: join_slot(
                 p, dp, cfg, st, prompt, rl, slot, greedy=greedy))
+        # chunked prefill compiles one (non-final, final) executable pair
+        # per VIEW EXTENT (power-of-two ladder, <= log2(max_len) of them)
+        # — independent of how many distinct prompt lengths are served
+        self._chunk_fns = {
+            fin: jax.jit(
+                lambda p, dp, st, ch, start, rl, slot, view, _f=fin:
+                join_slot_chunk(p, dp, cfg, st, ch, start, rl, slot,
+                                final=_f, view_len=view, greedy=greedy),
+                static_argnums=7)
+            for fin in (False, True)} if prefill_chunk else {}
 
     # -- prefill-on-join -----------------------------------------------------
 
     def _pad_len(self, n: int) -> int:
-        b = self.prefill_bucket
+        # chunked prefill pads the context to a chunk multiple instead of
+        # a bucket multiple (every chunk is exactly prefill_chunk wide)
+        b = self.prefill_chunk or self.prefill_bucket
         return max(-(-n // b) * b, b)
 
     @property
@@ -383,7 +544,12 @@ class SpeculativeEngine(_EngineBase):
         return padded, n
 
     def _warm_buckets(self, requests: List[Request]) -> set:
-        """Padded prompt lengths to precompile joins for."""
+        """Padded prompt lengths to precompile joins for.  Empty under
+        chunked prefill — the two chunk executables cover every prompt
+        length (including post-preemption resumes), so there are no
+        per-bucket compiles to warm."""
+        if self.prefill_chunk:
+            return set()
         return {self._pad_len(len(r.prompt)) for r in requests}
 
     def _check_capacity(self, r: Request) -> None:
@@ -409,7 +575,132 @@ class SpeculativeEngine(_EngineBase):
                              jnp.zeros(P, jnp.int32), jnp.int32(1),
                              jnp.int32(0))
 
+    # -- chunked prefill (DESIGN.md §8) --------------------------------------
+
+    def _chunk_view_len(self, end: int) -> int:
+        """Static attention-view extent for a chunk whose write region
+        ends at ``end``: the next power of two >= max(end, 64), clamped
+        to the row capacity.  Masked tails are exact no-ops, so the
+        extent never changes bits — only how much of the cache the chunk
+        sweeps (and how many traces exist: one per extent)."""
+        cap = self.max_len
+        if not self._view_grows:
+            return cap
+        v = 64
+        while v < min(end, cap):
+            v *= 2
+        return min(v, cap)
+
+    def _chunk_views(self, requests: List[Request]) -> set:
+        """View extents the queued requests' chunks will need (for
+        warmup; a live-submitted longer prompt pays its own compile,
+        like a new bucket used to)."""
+        views = set()
+        if not self.prefill_chunk:
+            return views
+        for r in requests:
+            n = self._pad_len(len(r.prompt))
+            for end in range(self.prefill_chunk, n + 1, self.prefill_chunk):
+                views.add(self._chunk_view_len(end))
+        return views
+
+    def _dispatch_chunk(self, state, si: int, chunk: np.ndarray, start: int,
+                        real_len: int, final: bool):
+        """Queue one prefill chunk into the device lane (no host reads)."""
+        view = self._chunk_view_len(start + self.prefill_chunk)
+        return self._chunk_fns[final](
+            self.params, self.draft_params, state, jnp.asarray(chunk),
+            jnp.int32(start), jnp.int32(real_len), jnp.int32(si), view)
+
+    def _warm_chunk(self, state, final: bool, view: int):
+        return self._chunk_fns[final](
+            self.params, self.draft_params, state,
+            jnp.zeros(self.prefill_chunk, jnp.int32), jnp.int32(0),
+            jnp.int32(1), jnp.int32(0), view)
+
+    def _start_prefill(self, si: int, r: Request, slots) -> None:
+        """Move a queue head into slot ``si`` in the 'prefilling' state:
+        the slot is owned (joins/refills skip it) but inactive (decode
+        steps mask it) until its final chunk lands."""
+        padded, n = self._padded_context(r)
+        self._prefills[si] = _PrefillJob(request=r, ctx=padded, real_len=n)
+        slots[si] = r
+        r.t_join = time.time()
+        self._seq += 1
+        self._join_seq[si] = self._seq
+
+    def _pump_prefill(self, si: int, state, active, slots, pending,
+                      joins: list, budget: int):
+        """Dispatch as many of slot ``si``'s remaining chunks as ``budget``
+        allows.  The final chunk activates the slot and registers the
+        deferred first-token read exactly like a monolithic join."""
+        C = self.prefill_chunk
+        while si in self._prefills and budget >= C:
+            job = self._prefills[si]
+            if not self._grow_prefill(si, job, slots, active, pending):
+                break                      # pool dry even after preemption?
+            if si not in self._prefills:
+                break                      # _grow_prefill preempted us
+            start, end = job.off, job.off + C
+            final = end >= len(job.ctx)
+            state = self._dispatch_chunk(state, si, job.ctx[start:end],
+                                         start, job.real_len, final)
+            self._device_fed()
+            job.off = end
+            budget -= C
+            self.stats.prefill_chunks += 1
+            self.stats.prefill_tokens += max(
+                min(end, job.real_len) - start, 0)
+            self._advance_prefill_cursor(si, min(end, job.real_len))
+            if final:
+                r = job.request
+                del self._prefills[si]
+                active[si] = True
+                self._live_joins[si] = (r, state.last_token)
+                joins.append((si, r, state.last_token))
+        return state, budget
+
+    def _advance_prefills(self, state, slots, active, pending,
+                          joins: list):
+        """The chunked-prefill lane of one loop iteration: advance
+        in-progress prefills oldest-first, then admit queue heads into
+        free slots — dispatching at most ``prefill_budget`` prompt tokens
+        in total, so the decode step this iteration co-schedules with
+        never waits on more than a bounded slice of prefill work."""
+        budget = self.prefill_budget
+        for si in sorted(self._prefills, key=lambda s: self._join_seq[s]):
+            state, budget = self._pump_prefill(si, state, active, slots,
+                                               pending, joins, budget)
+        for si in range(len(slots)):
+            if budget < self.prefill_chunk or not pending:
+                break
+            if active[si] or si in self._prefills:
+                continue
+            if not self._admit_prefill(pending[0]):
+                break                      # strict FIFO: head blocks tail
+            r = pending.popleft()
+            self._start_prefill(si, r, slots)
+            state, budget = self._pump_prefill(si, state, active, slots,
+                                               pending, joins, budget)
+        return state
+
     # -- scheduler hooks (paged engine overrides; dense cache needs none) ----
+
+    def _admit_prefill(self, r: Request) -> bool:
+        """Admission for a chunked join — the paged engine prices only the
+        FIRST chunk's blocks (incremental allocation, §8)."""
+        return self._admit(r)
+
+    def _grow_prefill(self, si: int, job: _PrefillJob, slots, active,
+                      pending) -> bool:
+        """Ensure capacity for the next chunk's writes (paged: allocate
+        its blocks, preempting on exhaustion).  Dense caches always have
+        the full row."""
+        return True
+
+    def _advance_prefill_cursor(self, si: int, n: int) -> None:
+        """Host mirror of the prefill cursor (paged: ``_slot_len``)."""
+        pass
 
     def _init_pool(self, max_batch: int, rng):
         # record the dense reservation so benchmarks can put dense and
@@ -451,27 +742,71 @@ class SpeculativeEngine(_EngineBase):
         """Serve everything ``submit``-ted so far and return the stats."""
         return self.serve(max_batch=max_batch, warmup=warmup)
 
-    def _poll_source(self, pending: deque, max_batch: int) -> None:
-        """Pull newly arrived requests.  Callables are polled once per
-        loop iteration (None => exhausted); iterators are pulled with
-        backpressure (at most ``max_batch`` queued-unjoined requests)."""
-        if self._src_done:
-            return
-        if self._src_call is not None:
-            batch = self._src_call()
-            if batch is None:
-                self._src_done = True
+    def _feed_source(self, source, q: "queue.Queue",
+                     stop: threading.Event) -> None:
+        """Background feeder (PR-4 follow-up): pulls from the user's
+        ``source`` on its own thread so a slow iterator/callable can never
+        starve the device pipeline — the serve loop only ever drains the
+        bounded handoff queue, non-blocking.  Callables are polled in a
+        tight loop (None => exhausted, empty batch => nothing yet);
+        iterators are pulled with the queue's bound as backpressure.  A
+        sentinel marks exhaustion; exceptions are carried back to the
+        serve loop and re-raised there."""
+        try:
+            if callable(source):
+                while not stop.is_set():
+                    batch = source()
+                    if batch is None:
+                        break
+                    got = False
+                    for r in batch:
+                        got = True
+                        if not self._feed_put(q, r, stop):
+                            return
+                    if not got:
+                        # idle poll cadence ~ a decode step, not a spin:
+                        # a callable source may do real work (an RPC to
+                        # an upstream queue) on every call
+                        time.sleep(2e-3)
             else:
-                for r in batch:
-                    self.submit(r)
+                for r in source:
+                    if not self._feed_put(q, r, stop):
+                        return
+        except BaseException as e:             # noqa: BLE001 — relayed
+            self._src_err.append(e)
+        finally:
+            self._feed_put(q, _SOURCE_DONE, stop)
+
+    @staticmethod
+    def _feed_put(q: "queue.Queue", item, stop: threading.Event) -> bool:
+        """Bounded put that stays responsive to shutdown."""
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _poll_source(self, pending: deque, max_batch: int) -> None:
+        """Drain the feeder thread's handoff queue (never blocks).
+        Backpressure: stop draining once ``max_batch`` requests sit
+        queued-unjoined — the bounded handoff then throttles the feeder."""
+        if self._src_err:
+            err = self._src_err[0]
+            self._src_done = True
+            raise err
+        if self._src_done or self._src_q is None:
             return
         while len(pending) < max_batch:
             try:
-                r = next(self._src_iter)
-            except StopIteration:
+                item = self._src_q.get_nowait()
+            except queue.Empty:
+                return
+            if item is _SOURCE_DONE:
                 self._src_done = True
                 return
-            self.submit(r)
+            self.submit(item)
 
     # -- serving -------------------------------------------------------------
 
@@ -482,15 +817,28 @@ class SpeculativeEngine(_EngineBase):
             self._check_capacity(r)
             self._queue.append(r)      # enqueue-stamped after warmup
         pending = self._queue
-        self._src_call = source if callable(source) else None
-        self._src_iter = (iter(source)
-                          if source is not None and self._src_call is None
-                          else None)
         self._src_done = source is None
+        self._src_err: List[BaseException] = []
+        self._src_q: Optional[queue.Queue] = None
+        self._src_stop: Optional[threading.Event] = None
+        self._src_thread: Optional[threading.Thread] = None
+        if source is not None:
+            # feeder thread + bounded handoff: the loop never blocks on
+            # (or repeatedly polls) a slow source in the dispatch path
+            self._src_q = queue.Queue(maxsize=max(2 * max_batch, 8))
+            self._src_stop = threading.Event()
+            self._src_thread = threading.Thread(
+                target=self._feed_source, args=(source, self._src_q,
+                                                self._src_stop),
+                name="engine-source-feeder", daemon=True)
+            self._src_thread.start()
         self._slots: List[Optional[Request]] = [None] * max_batch
         self._active = np.zeros(max_batch, bool)
         self._inflight = deque()
         self._live_joins = {}
+        self._prefills = {}
+        self._seq = getattr(self, "_seq", 0)
+        self._join_seq = np.zeros(max_batch, np.int64)
         slots, active = self._slots, self._active
 
         self.rng, sub = jax.random.split(self.rng)
@@ -498,9 +846,16 @@ class SpeculativeEngine(_EngineBase):
 
         if warmup:  # compile the step + every join bucket outside the clock
             jax.block_until_ready(self._run_step(
-                state, jnp.asarray(active)).state.cache_len)
+                state, _snapshot(active)).state.cache_len)
             for P in sorted(self._warm_buckets(list(pending))):
                 jax.block_until_ready(self._warm_join(state, P).cache_len)
+            if self.prefill_chunk:
+                views = (self._chunk_views(list(pending))
+                         or {self._chunk_view_len(self.prefill_chunk)})
+                for view in sorted(views):
+                    for fin in (False, True):
+                        jax.block_until_ready(
+                            self._warm_chunk(state, fin, view).cache_len)
 
         # enqueue AFTER warmup so latency measures serving, not XLA
         # compiles (live submit()s carry their own arrival stamp already)
@@ -515,10 +870,21 @@ class SpeculativeEngine(_EngineBase):
         # closes at the next join/step dispatch — its span is host work
         # that serialized with device compute (EngineStats.host_stall_s)
         self._starve_t0: Optional[float] = t0
+        try:
+            self._serve_loop(pending, max_batch, slots, active, state)
+        finally:
+            # always reap the feeder thread, even on a deadlock raise or
+            # a relayed source exception
+            self._stop_feeder()
+        self.stats.wall_s += time.time() - t0
+        self._post_serve()
+        return self.stats
+
+    def _serve_loop(self, pending, max_batch, slots, active, state) -> None:
         while True:
             self._poll_source(pending, max_batch)
             if (not pending and not active.any() and not self._inflight
-                    and self._src_done):
+                    and not self._prefills and self._src_done):
                 break
 
             # harvest-first policy: give up one step of overlap when the
@@ -530,23 +896,30 @@ class SpeculativeEngine(_EngineBase):
 
             # refill every free slot before the next step (strict FIFO: a
             # head-of-line request the pool can't admit blocks the rest).
-            # The join is DISPATCHED into the device lane without flushing
-            # the in-flight step; its first sampled token is read back at
-            # harvest, one step behind.
+            # Joins/chunks are DISPATCHED into the device lane without
+            # flushing the in-flight step; a join's first sampled token is
+            # read back at harvest, one step behind.
             joins = []
-            for si in range(max_batch):
-                if active[si] or not pending:
-                    continue
-                if not self._admit(pending[0]):
-                    break
-                r = pending.popleft()
-                state = self._join(state, si, r)
-                self._device_fed()      # prefill queued: device not starved
-                r.t_join = time.time()
-                self._live_joins[si] = (r, state.last_token)
-                joins.append((si, r, state.last_token))
-                slots[si] = r
-                active[si] = True
+            if self.prefill_chunk:
+                # chunked lane (§8): at most prefill_budget prompt tokens
+                # ride alongside this iteration's decode step; a slot only
+                # activates (and joins the step) once its final chunk is in
+                state = self._advance_prefills(state, slots, active,
+                                               pending, joins)
+            else:
+                for si in range(max_batch):
+                    if active[si] or not pending:
+                        continue
+                    if not self._admit(pending[0]):
+                        break
+                    r = pending.popleft()
+                    state = self._join(state, si, r)
+                    self._device_fed()  # prefill queued: device not starved
+                    r.t_join = time.time()
+                    self._live_joins[si] = (r, state.last_token)
+                    joins.append((si, r, state.last_token))
+                    slots[si] = r
+                    active[si] = True
             # paged: grow block tables for the coming step, preempting the
             # most-recently-joined slots back into `pending` on exhaustion
             state = self._before_step(state, slots, active, pending)
@@ -556,7 +929,7 @@ class SpeculativeEngine(_EngineBase):
                      if self._live_joins.get(si, (None,))[0] is r]
 
             if active.any():
-                res = self._run_step(state, jnp.asarray(active))
+                res = self._run_step(state, _snapshot(active))
                 self._device_fed()
                 state = res.state
                 self._inflight.append(_StepRecord(
@@ -572,6 +945,11 @@ class SpeculativeEngine(_EngineBase):
                 # nothing dispatchable: drain the pipeline — harvested
                 # finishes free slots/blocks and may unblock admission
                 self._harvest(self._inflight.popleft())
+            elif self._prefills:
+                # prefill-only interval (e.g. the pool is all long
+                # prompts): chunks are already queued on the device each
+                # iteration — just keep pumping, nothing to harvest yet
+                continue
             elif pending:
                 raise RuntimeError(
                     "pool deadlock: no active slots and the queue head "
@@ -580,9 +958,29 @@ class SpeculativeEngine(_EngineBase):
             else:
                 time.sleep(2e-4)       # idle: waiting on a live source
                 self._starve_t0 = time.time()   # no-traffic idle != stall
-        self.stats.wall_s += time.time() - t0
-        self._post_serve()
-        return self.stats
+
+    def _stop_feeder(self) -> None:
+        if self._src_thread is not None:
+            self._src_stop.set()
+            self._src_thread.join(timeout=2.0)
+            # requests the feeder already pulled from the caller's source
+            # but the loop never drained (error-path exits: deadlock
+            # raise, relayed source exception) must not be lost — park
+            # them in the engine queue so a later serve()/drain() still
+            # serves them
+            while True:
+                try:
+                    item = self._src_q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not _SOURCE_DONE:
+                    try:
+                        self.submit(item)
+                    except ValueError:
+                        pass   # unservable anyway; don't mask the exit
+            self._src_thread = None
+            self._src_q = None
+            self._src_stop = None
 
     def _harvest_first(self, pending: deque) -> bool:
         """Should the loop read an in-flight step BEFORE dispatching?
@@ -676,6 +1074,8 @@ class SpeculativeEngine(_EngineBase):
                         r.done = True
                         break
                 self.stats.tokens += appended
+                if appended:
+                    self._note_emission(r, appended)
                 if r.done or len(r.output) >= r.max_new_tokens:
                     self._finish(r)
             # else: zombie row — finished before this (already-dispatched)
@@ -693,6 +1093,7 @@ class SpeculativeEngine(_EngineBase):
     def _absorb_first_token(self, r: Request, tok0: int) -> bool:
         """Append a join's first sampled token; True if it finished the
         request outright (degenerate budget/EOS at t=0)."""
+        self._note_first_token(r)
         r.output.append(tok0)
         if (len(r.output) >= r.max_new_tokens or
                 (r.eos_token is not None and tok0 == r.eos_token)):
@@ -769,6 +1170,15 @@ class PagedSpeculativeEngine(SpeculativeEngine):
     kernel and commits through the table — per-step transient memory is
     O(max_batch × T), not the dense view.  ``"shim"`` restores the old
     gather/scatter data path (parity oracle / triage only).
+
+    With ``prefill_chunk`` (§8) prefill is a native pool consumer too:
+    chunks scatter through the table (no dense join strip), blocks are
+    allocated incrementally — one chunk's real tokens at a time — and
+    admission is priced per chunk, so a long prompt starts prefilling as
+    soon as one chunk's blocks are free instead of waiting for its whole
+    footprint.  Pool exhaustion mid-prefill evicts the most recent
+    joiner (possibly the prefilling slot itself — its partial prefill is
+    discarded and byte-exactly recomputed on resume).
     """
 
     def __init__(self, params, draft_params, cfg: ModelConfig, tree, *,
@@ -802,12 +1212,23 @@ class PagedSpeculativeEngine(SpeculativeEngine):
         self._join_fn = jax.jit(
             lambda p, dp, st, prompt, rl, slot, row: paged_join_slot(
                 p, dp, cfg_, st, prompt, rl, slot, row, greedy=greedy))
+        # chunked prefill writes straight through the block table — the
+        # per-slot dense join strip never exists on this path (§8).  The
+        # view extent arrives as a static TABLE-ROW truncation (blocks)
+        self._chunk_fns = {
+            fin: jax.jit(
+                lambda p, dp, st, ch, start, rl, slot, row, vb, _f=fin:
+                paged_join_slot_chunk(p, dp, cfg_, st, ch, start, rl, slot,
+                                      row, final=_f, view_blocks=vb,
+                                      greedy=greedy),
+                static_argnums=8)
+            for fin in (False, True)} if self.prefill_chunk else {}
 
     # -- jitted-call adapters (block table rides along as an operand) --------
 
     def _run_step(self, state, active=None):
         return self._step(self.params, self.draft_params, state,
-                          jnp.asarray(self._tables), active)
+                          _snapshot(self._tables), active)
 
     def _join(self, state, slot: int, r: Request):
         padded, n = self._padded_context(r)
@@ -823,11 +1244,14 @@ class PagedSpeculativeEngine(SpeculativeEngine):
         return self._join_fn(self.params, self.draft_params, state,
                              jnp.asarray(padded), jnp.int32(n),
                              jnp.int32(slot),
-                             jnp.asarray(self._tables[slot]))
+                             _snapshot(self._tables[slot]))
 
     def _warm_buckets(self, requests: List[Request]) -> set:
         buckets = super()._warm_buckets(requests)
-        if self.num_blocks is not None and self.prefill_bucket > 1:
+        # chunked prefill resumes with the same two chunk executables —
+        # no per-bucket warm needed (super() already returned empty)
+        if (self.num_blocks is not None and self.prefill_bucket > 1
+                and not self.prefill_chunk):
             # preemption can resume a request with context up to
             # prompt + budget - 1 tokens: precompile every bucket a resume
             # could land in so the retrace never runs inside the clock.
@@ -847,6 +1271,68 @@ class PagedSpeculativeEngine(SpeculativeEngine):
                              jnp.zeros(P, jnp.int32), jnp.int32(1),
                              jnp.int32(0),
                              jnp.zeros(self.blocks_per_slot, jnp.int32))
+
+    # -- chunked prefill over the pool (§8) ----------------------------------
+
+    def _view_blocks(self, view: int) -> int:
+        return min(-(-view // self.block_size), self.blocks_per_slot)
+
+    def _dispatch_chunk(self, state, si: int, chunk: np.ndarray, start: int,
+                        real_len: int, final: bool):
+        view = self._chunk_view_len(start + self.prefill_chunk)
+        return self._chunk_fns[final](
+            self.params, self.draft_params, state, jnp.asarray(chunk),
+            jnp.int32(start), jnp.int32(real_len), jnp.int32(si),
+            _snapshot(self._tables[si]), self._view_blocks(view))
+
+    def _warm_chunk(self, state, final: bool, view: int):
+        # warm against an all-NULL table row (garbage absorbed, discarded)
+        return self._chunk_fns[final](
+            self.params, self.draft_params, state,
+            jnp.zeros(self.prefill_chunk, jnp.int32), jnp.int32(0),
+            jnp.int32(1), jnp.int32(0),
+            jnp.zeros(self.blocks_per_slot, jnp.int32),
+            self._view_blocks(view))
+
+    def _admit_prefill(self, r: Request) -> bool:
+        """Chunked admission is priced per chunk: only the FIRST chunk's
+        real-token blocks must be free (plus the usual one-growth-block
+        headroom per joined slot) — later chunks allocate as they
+        dispatch, so a long prompt no longer has to find its whole
+        footprint at once to start prefilling."""
+        n = len(r.prompt) + len(r.output)
+        need = self._alloc.blocks_for(min(self.prefill_chunk, n))
+        headroom = sum(1 for o in self._owned if o)
+        return need + headroom <= self._alloc.free_blocks
+
+    def _grow_prefill(self, si: int, job: _PrefillJob, slots, active,
+                      pending) -> bool:
+        """Allocate blocks covering the next chunk's REAL tokens (final-
+        chunk pads write to the NULL block and are never read).  On
+        exhaustion, evict the most recent joiner — possibly ``si``
+        itself, in which case the partial prefill is abandoned and the
+        request requeued (the up-front capacity check guarantees a lone
+        slot can always cover a whole request, so this terminates)."""
+        cover = min(job.off + self.prefill_chunk, job.real_len)
+        while True:
+            need = self._alloc.blocks_for(cover) - len(self._owned[si])
+            if need <= 0:
+                return True
+            got = self._alloc.alloc(need)
+            if got is not None:
+                base = len(self._owned[si])
+                self._owned[si].extend(got)
+                self._tables[si, base:base + len(got)] = got
+                return True
+            victims = [s for s in range(len(slots))
+                       if active[s] or s in self._prefills]
+            victim = max(victims, key=lambda s: self._join_seq[s])
+            self._preempt(int(victim), slots, active, pending)
+            if victim == si:
+                return False
+
+    def _advance_prefill_cursor(self, si: int, n: int) -> None:
+        self._slot_len[si] = n
 
     # -- block accounting ----------------------------------------------------
 
@@ -930,13 +1416,27 @@ class PagedSpeculativeEngine(SpeculativeEngine):
                     self._owned[si].extend(got)
                     self._tables[si, base:base + len(got)] = got
                     break
-                victim = max(np.where(active)[0],
-                             key=lambda s: self._join_seq[s])
+                # prefilling slots are eviction candidates too — they hold
+                # blocks and are usually the most recent joiners
+                victims = [s for s in range(len(slots))
+                           if active[s] or s in self._prefills]
+                victim = max(victims, key=lambda s: self._join_seq[s])
                 self._preempt(int(victim), slots, active, pending)
         return state
 
     def _preempt(self, si: int, slots, active, pending) -> None:
         r = slots[si]
+        job = self._prefills.pop(si, None)
+        if job is not None:
+            # mid-prefill eviction (§8): the victim never activated, so
+            # no step ran it and no join token is pending — just free its
+            # blocks and requeue; the resume restarts from chunk 0 (the
+            # partial prefill is discarded, byte-exactly recomputed)
+            slots[si] = None
+            self._release(si)
+            pending.appendleft(r)
+            self.stats.preemptions += 1
+            return
         # async: the victim's output must be complete before it is
         # requeued (resume re-prefills prompt + output).  Force-read its
         # join if unharvested, then drain every in-flight step it ran in
@@ -1029,6 +1529,7 @@ class BucketedEngine(_EngineBase):
             greedy=(self.criterion == "greedy"))
         for r, t in zip(batch, np.asarray(state.last_token)):
             r.t_join = time.time()
+            self._note_first_token(r)
             r.output.append(int(t))
             if (len(r.output) >= r.max_new_tokens or
                     (r.eos_token is not None and int(t) == r.eos_token)):
@@ -1071,6 +1572,8 @@ class BucketedEngine(_EngineBase):
                         r.done = True
                         break
                 self.stats.tokens += appended
+                if appended:
+                    self._note_emission(r, appended)
                 if r.done or len(r.output) >= r.max_new_tokens:
                     self._finish(r)
             self.stats.steps += 1

@@ -63,11 +63,11 @@ from typing import Any, List, NamedTuple, Optional
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.heads import init_prefix_cache
-from repro.core.speculative import (DecodeState, StepResult,
+from repro.core.heads import init_prefix_cache, prefix_forward
+from repro.core.speculative import (DecodeState, StepResult, _first_token,
                                     autoregressive_step, join_slot,
                                     spec_decode_step)
-from repro.models.model import init_cache
+from repro.models.model import forward, init_cache
 from repro.serving.cache import ATTN_KEYS
 
 NULL_BLOCK = 0
@@ -352,3 +352,88 @@ def paged_join_slot(params, draft_params, cfg: ModelConfig,
         last_hidden=pstate.last_hidden.at[slot].set(
             joined.last_hidden[0].astype(pstate.last_hidden.dtype)),
         rng=joined.rng)
+
+
+def paged_join_slot_chunk(params, draft_params, cfg: ModelConfig,
+                          pstate: PagedState, chunk, start, real_len, slot,
+                          table_row, *, final: bool,
+                          view_blocks: Optional[int] = None,
+                          greedy: bool = True) -> PagedState:
+    """One chunk of a resumable prefill over the paged pools (DESIGN.md
+    §8) — the paged twin of ``core/speculative.py::join_slot_chunk``.
+
+    Unlike ``paged_join_slot`` this NEVER assembles the per-slot dense
+    strip: the chunk forward receives the pools plus the slot's (1, M)
+    table row and writes the chunk K/V token-granularly through the table
+    (``_paged_scatter``), so prefill becomes a native pool consumer and
+    the engine can allocate blocks incrementally — one chunk's coverage
+    at a time — instead of the whole prompt's at join.  Attention gathers
+    one LAYER's logical view per scan step (the per-layer transient, same
+    class as the windowed/MLA verify fallback).  Table entries beyond the
+    allocated coverage point at the NULL block, which absorbs pad/scratch
+    garbage writes; the engine only ever relies on positions it allocated
+    blocks for.
+
+    ``view_blocks`` (static) truncates the slot's table row to its first
+    ``view_blocks`` entries — the paged twin of ``join_slot_chunk``'s
+    ``view_len``: attention gathers/sweeps only that many blocks per
+    layer, so per-chunk cost tracks the prefill cursor instead of the
+    full M-block view.  The extent must cover ``start + C`` positions;
+    a covering extent's masked tail is an exact no-op, so the bits don't
+    depend on it.
+    """
+    C = chunk.shape[0]
+    t1 = table_row[:view_blocks][None, :]                     # (1, Mv)
+    pos = (start + jnp.arange(C))[None, :]
+    start1 = jnp.reshape(start, (1,)).astype(jnp.int32)
+    valid = jnp.clip(real_len - start, 0, C)
+    # first chunk: zero the carried recurrent state — the dense per-slot
+    # rows still hold the previous occupant's state (see join_slot_chunk;
+    # pool-layout attention needs no reset, stale entries are masked)
+    fresh = jnp.asarray(start) == 0
+
+    def _row_state(a):
+        row = a[:, slot][:, None]
+        return jnp.where(fresh, jnp.zeros_like(row), row)
+
+    cache = [{k: (a if k in ATTN_KEYS else _row_state(a))
+              for k, a in g.items()} for g in pstate.pools]
+    out = forward(params, cfg, chunk[None, :], pos, mode="full",
+                  cache=cache, cache_len=start1,
+                  valid_len=jnp.reshape(valid, (1,)), block_table=t1,
+                  want_logits=False)
+
+    # attention arrays came back as updated pools (scattered through the
+    # table inside the forward); recurrent rows are written back per slot
+    pools = [{k: (go[k] if k in ATTN_KEYS
+                  else gp[k].at[:, slot].set(go[k][:, 0].astype(gp[k].dtype)))
+              for k in gp} for gp, go in zip(pstate.pools, out.cache)]
+
+    h_seq = out.hidden
+    pk, pv = pstate.prefix_k, pstate.prefix_v
+    ph = None
+    if draft_params is not None and "prefix" in draft_params:
+        ph, pk, pv = prefix_forward(
+            draft_params, cfg, h_seq, pos, cache_k=pk, cache_v=pv,
+            cache_len=start1, block_table=t1, prefill=True)
+
+    if not final:
+        return PagedState(
+            pools=pools, prefix_k=pk, prefix_v=pv,
+            cache_len=pstate.cache_len.at[slot].set(
+                (start + C).astype(jnp.int32)),
+            last_token=pstate.last_token, last_hidden=pstate.last_hidden,
+            rng=pstate.rng)
+
+    idx = jnp.clip(valid - 1, 0, C - 1)
+    h_last = h_seq[0, idx]
+    tok0, rng = _first_token(params, cfg, h_last, pstate.rng, greedy)
+    h = ph[0, idx] if ph is not None else h_last
+    return PagedState(
+        pools=pools, prefix_k=pk, prefix_v=pv,
+        cache_len=pstate.cache_len.at[slot].set(
+            jnp.asarray(real_len).astype(jnp.int32)),
+        last_token=pstate.last_token.at[slot].set(tok0),
+        last_hidden=pstate.last_hidden.at[slot].set(
+            h.astype(pstate.last_hidden.dtype)),
+        rng=rng)

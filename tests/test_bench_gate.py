@@ -33,6 +33,14 @@ def _doc():
              "step_transient_tokens_native": 32,
              "step_transient_tokens_shim": 1024},
         ],
+        "serve_longprompt": [
+            {"name": "unchunked", "us_per_tok": 900.0, "tok_per_s": 1100.0,
+             "ttft_ms": 250.0, "p99_ttft_ms": 400.0, "p99_itl_ms": 90.0,
+             "prefill_chunks": 0},
+            {"name": "chunk16", "us_per_tok": 950.0, "tok_per_s": 1050.0,
+             "ttft_ms": 200.0, "p99_ttft_ms": 350.0, "p99_itl_ms": 40.0,
+             "prefill_chunks": 40},
+        ],
         "csv_rows": ["kernel_flash_attention,500.0,interpret_max_err=1e-7"],
     }
 
@@ -108,6 +116,54 @@ def test_slowed_csv_row_trips():
     assert len(bad) == 1 and "csv[kernel_flash_attention]" in bad[0]
 
 
+def test_serve_itl_regression_trips():
+    """A p99 inter-token-latency blowup on the long-prompt serve sweep
+    (the chunked-prefill responsiveness win rotting) must fail the gate."""
+    fresh = _doc()
+    fresh["serve_longprompt"][1]["p99_itl_ms"] *= 10
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    # a 10x blowup trips BOTH the absolute drift check and the same-run
+    # chunked-vs-unchunked inversion check
+    assert len(bad) == 2 and all("p99_itl_ms" in b and "chunk16" in b
+                                 for b in bad)
+    assert any("inverted" in b for b in bad)
+
+
+def test_serve_row_within_tolerance_passes():
+    fresh = _doc()
+    fresh["serve_longprompt"][0]["ttft_ms"] *= 2.0       # < tol 3
+    assert gate.compare(fresh, _doc(), tol=3.0) == []
+
+
+def test_serve_relative_inversion_trips():
+    """A chunked row may drift within its own baseline tolerance yet be
+    WORSE than the same run's unchunked row — the win inverted.  The
+    same-run relative check must catch that even when absolute drift
+    passes."""
+    fresh = _doc()
+    base = _doc()
+    base["serve_longprompt"][1]["p99_itl_ms"] = 100.0
+    # 240 < 100 * tol(3) => absolute drift passes; but 240 > the same
+    # run's unchunked 90 * 1.5 => relative inversion must trip
+    fresh["serve_longprompt"][1]["p99_itl_ms"] = 240.0
+    bad = gate.compare(fresh, base, tol=3.0)
+    assert len(bad) == 1 and "inverted" in bad[0]
+
+
+def test_serve_row_missing_trips():
+    fresh = _doc()
+    fresh["serve_longprompt"] = fresh["serve_longprompt"][:1]
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert len(bad) == 1 and "chunk16" in bad[0] and "missing" in bad[0]
+
+
+def test_serve_column_missing_trips():
+    fresh = _doc()
+    del fresh["serve_longprompt"][0]["us_per_tok"]
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert len(bad) == 1 and "us_per_tok" in bad[0]
+
+
 def test_parity_drift_trips():
     fresh = _doc()
     fresh["tree_attention_paged_sweep"][0]["paged_vs_dense_max_err"] = 0.5
@@ -145,3 +201,10 @@ def test_committed_baseline_has_gate_fields():
     assert any(name.startswith("kernel_")
                for name in gate._csv_timings(doc)), \
         "baseline must carry kernel csv rows"
+    serve = doc["serve_longprompt"]
+    names = {e["name"] for e in serve}
+    assert "unchunked" in names and any("chunk" in n for n in names), \
+        "baseline must cover both unchunked and chunked serving"
+    for e in serve:
+        for k in gate.SERVE_TIMING_KEYS:
+            assert k in e, f"baseline serve row missing {k}"

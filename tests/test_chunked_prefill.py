@@ -1,0 +1,326 @@
+"""Chunked prefill tests (DESIGN.md §8).
+
+Load-bearing invariants:
+
+  * **byte-parity across chunk sizes**: under greedy decoding a chunked
+    engine (``prefill_chunk > 0``) must produce byte-identical outputs to
+    the unchunked engine and to serial ``generate()`` — for the dense and
+    paged engines and for a recurrent-state arch (rwkv6), at two or more
+    chunk sizes, under ``inflight ∈ {1, 2}``.  Chunking is pure
+    scheduling: the chunk forward reuses the full-prefill blocked
+    attention (trailing-masked no-op) and the length-masked recurrent
+    scan, so the bits cannot depend on where the chunk boundaries fell.
+  * **forced preemption mid-prefill** (paged): a pool too small for the
+    workload must evict prefilling slots, requeue their requests, and
+    still finish byte-exact with zero leaked blocks.
+  * **two compiles**: a chunked engine compiles exactly two prefill
+    executables — (chunk, non-final) and (chunk, final) — no matter how
+    many distinct prompt lengths it serves.
+  * **length-masked recurrent prefill** (the prefill_bucket unlock):
+    bucketed right-padding of mamba2/rwkv6 prompts is bitwise invisible —
+    the scan carries state past pads unchanged (models/ssm.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.heads import init_draft_params
+from repro.core.trees import default_tree
+from repro.models.model import init_params
+from repro.models.ssm import mamba2_fwd, rwkv6_timemix, init_rwkv6
+from repro.serving.engine import (PagedSpeculativeEngine, Request,
+                                  SpeculativeEngine)
+
+from test_engine_continuous import MAX_LEN, _requests, _serial_ref
+
+BS = 16                                      # paged block size
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = jax.random.PRNGKey(0)
+    cfg = dataclasses.replace(get_config("vicuna-tiny"), dtype="float32")
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = default_tree(8, 2, 3)
+    return cfg, params, dp, tree
+
+
+@pytest.fixture(scope="module")
+def serial_refs(setup):
+    """Ragged lens/budgets incl. one long prompt (~4x the mean)."""
+    cfg, params, dp, tree = setup
+    rs = np.random.RandomState(0)
+    lens, buds = (16, 23, 9, 96, 32), (12, 14, 10, 8, 8)
+    return [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, n).astype(np.int32),
+                        budget)
+            for n, budget in zip(lens, buds)]
+
+
+def _assert_all_match(reqs, refs, what):
+    for r, (_, _, ref, _) in zip(reqs, refs):
+        assert r.output == ref, f"{what} diverged from serial generate"
+        assert r.done
+
+
+@pytest.mark.parametrize("chunk", [8, 16])
+@pytest.mark.parametrize("inflight", [1, 2])
+def test_dense_chunked_matches_serial(setup, serial_refs, chunk, inflight):
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                            prefill_chunk=chunk, inflight=inflight)
+    reqs = _requests(serial_refs)
+    stats = eng.serve(reqs, max_batch=3)
+    _assert_all_match(reqs, serial_refs,
+                      f"dense chunk={chunk} inflight={inflight}")
+    # every prompt really was split: the 96-token prompt alone needs
+    # ceil(96/chunk) chunks
+    assert stats.prefill_chunks >= sum(
+        -(-n // chunk) for n in (16, 23, 9, 96, 32))
+    assert stats.prefill_tokens == sum((16, 23, 9, 96, 32))
+
+
+@pytest.mark.parametrize("chunk", [8, 16])
+@pytest.mark.parametrize("inflight", [1, 2])
+def test_paged_chunked_matches_serial(setup, serial_refs, chunk, inflight):
+    cfg, params, dp, tree = setup
+    eng = PagedSpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                                 block_size=BS, prefill_chunk=chunk,
+                                 inflight=inflight)
+    reqs = _requests(serial_refs)
+    eng.serve(reqs, max_batch=3)
+    _assert_all_match(reqs, serial_refs,
+                      f"paged chunk={chunk} inflight={inflight}")
+    assert eng._alloc.blocks_in_use == 0, "leaked blocks"
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+def test_paged_chunked_preemption_mid_prefill(setup, inflight):
+    """A pool sized so two long prompts cannot prefill side by side: the
+    scheduler must evict a mid-prefill slot (partial prefill discarded,
+    request requeued) and still finish byte-exact with no leak."""
+    cfg, params, dp, tree = setup
+    rs = np.random.RandomState(7)
+    refs = [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, 64).astype(np.int32),
+                        10)
+            for _ in range(2)]
+    eng = PagedSpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                                 block_size=BS, num_blocks=8,
+                                 prefill_chunk=16, inflight=inflight)
+    reqs = _requests(refs)
+    stats = eng.serve(reqs, max_batch=2)
+    assert stats.preemptions >= 1, "pool sizing should force eviction"
+    _assert_all_match(reqs, refs, f"preempted-prefill inflight={inflight}")
+    assert eng._alloc.blocks_in_use == 0, "leaked blocks"
+
+
+def test_chunked_compile_count_is_prompt_length_independent(setup,
+                                                           serial_refs):
+    """Five distinct prompt lengths, one chunk size => one (non-final,
+    final) chunk-trace pair per VIEW EXTENT on the power-of-two ladder —
+    never per prompt length — and zero join-bucket compiles."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                            prefill_chunk=16)
+    reqs = _requests(serial_refs)
+    expected_views = eng._chunk_views(reqs)
+    assert 1 <= len(expected_views) <= 3      # 64/128/... ladder, not 5
+    eng.serve(reqs, max_batch=3)
+    for fin in (False, True):
+        assert eng._chunk_fns[fin]._cache_size() == len(expected_views), \
+            f"final={fin} chunk fn retraced beyond the extent ladder"
+    assert eng._join_fn._cache_size() == 0, \
+        "chunked engine must never fall back to monolithic joins"
+    assert eng._step._cache_size() == 1
+
+
+def test_chunked_vs_unchunked_identical_streams(setup, serial_refs):
+    """chunked == unchunked, request for request (both already == serial,
+    but assert the direct equality the tentpole promises)."""
+    cfg, params, dp, tree = setup
+    a = _requests(serial_refs)
+    SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN).serve(
+        a, max_batch=3)
+    b = _requests(serial_refs)
+    SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                      prefill_chunk=8).serve(b, max_batch=3)
+    for ra, rb in zip(a, b):
+        assert ra.output == rb.output
+
+
+def test_rwkv6_chunked_and_bucketed_match_serial():
+    """Recurrent arch: chunked prefill at two chunk sizes AND bucketed
+    (non-chunked) padded prefill both byte-match serial — the
+    length-masked scan at work.  Chunk sizes snap to the inner scan
+    chunk so state-update grouping matches the monolithic scan."""
+    from repro.launch.specs import tree_for
+    cfg = dataclasses.replace(get_config("rwkv6-1.6b").reduced(),
+                              dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    dp = init_draft_params(jax.random.fold_in(rng, 1), cfg)
+    tree = tree_for(cfg)
+    rs = np.random.RandomState(0)
+    lens, buds = (12, 19, 70), (8, 10, 6)
+    refs = [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, n).astype(np.int32), b)
+            for n, b in zip(lens, buds)]
+    inner = cfg.ssm.chunk_size
+    for chunk in (inner, 2 * inner):
+        for inflight in (1, 2):
+            eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                                    prefill_chunk=chunk, inflight=inflight)
+            assert eng.prefill_chunk % inner == 0
+            reqs = _requests(refs)
+            eng.serve(reqs, max_batch=2)
+            _assert_all_match(reqs, refs,
+                              f"rwkv6 chunk={chunk} inflight={inflight}")
+    # misaligned request snaps up, stays exact
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                            prefill_chunk=inner - 1)
+    assert eng.prefill_chunk == inner
+    reqs = _requests(refs)
+    eng.serve(reqs, max_batch=2)
+    _assert_all_match(reqs, refs, "rwkv6 snapped chunk")
+
+
+def test_masked_scan_units():
+    """models/ssm.py length masking: a right-padded scan must return the
+    same final state (bitwise) as the exact-length scan, for both
+    recurrent layer families."""
+    cfg = dataclasses.replace(get_config("rwkv6-1.6b").reduced(),
+                              dtype="float32")
+    rng = jax.random.PRNGKey(3)
+    p = init_rwkv6(rng, cfg, jnp.float32)
+    n, pad_to = 11, 32
+    x = jax.random.normal(jax.random.fold_in(rng, 1),
+                          (2, n, cfg.d_model), jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (0, pad_to - n), (0, 0)), constant_values=1.0)
+    chunk = cfg.ssm.chunk_size
+    _, exact = rwkv6_timemix(p, cfg, x, mode="full", chunk=chunk)
+    _, masked = rwkv6_timemix(p, cfg, xp, mode="full", chunk=chunk,
+                              valid_len=jnp.full((2,), n, jnp.int32))
+    assert (np.asarray(exact["wkv_state"])
+            == np.asarray(masked["wkv_state"])).all()
+    assert (np.asarray(exact["shift_tm"])
+            == np.asarray(masked["shift_tm"])).all()
+
+    zcfg = dataclasses.replace(get_config("zamba2-1.2b").reduced(),
+                               dtype="float32")
+    from repro.models.ssm import init_mamba2
+    mp = init_mamba2(jax.random.fold_in(rng, 2), zcfg, jnp.float32)
+    xm = jax.random.normal(jax.random.fold_in(rng, 3),
+                           (2, n, zcfg.d_model), jnp.float32)
+    xmp = jnp.pad(xm, ((0, 0), (0, pad_to - n), (0, 0)), constant_values=1.0)
+    _, exact = mamba2_fwd(mp, zcfg, xm, mode="full")
+    _, masked = mamba2_fwd(mp, zcfg, xmp, mode="full",
+                           valid_len=jnp.full((2,), n, jnp.int32))
+    assert (np.asarray(exact["ssd_state"])
+            == np.asarray(masked["ssd_state"])).all()
+    assert (np.asarray(exact["conv_win"])
+            == np.asarray(masked["conv_win"])).all()
+
+
+def test_dispatch_snapshots_are_copies():
+    """Every dispatch operand built from MUTABLE host state (the active
+    mask, block tables) must be frozen at dispatch time.  Plain
+    ``jnp.asarray`` can zero-copy alias an aligned numpy array on the
+    CPU backend — then a later host mutation races with the in-flight
+    step (a per-process heap-alignment coin flip that corrupted greedy
+    streams, DESIGN.md §7).  ``_snapshot`` must never alias."""
+    from repro.serving.engine import _snapshot
+    for arr in (np.zeros(12, np.int32), np.zeros(16, bool),
+                np.zeros((2, 12), np.int32), np.zeros(3, bool)):
+        snap = _snapshot(arr)
+        arr[...] = 1
+        assert not np.asarray(snap).any(), \
+            f"snapshot of {arr.shape} {arr.dtype} aliased host memory"
+
+
+def test_ttft_and_itl_stats_populated(setup, serial_refs):
+    """EngineStats must carry one TTFT per request and ITL samples for
+    every post-first token, for chunked and unchunked engines."""
+    cfg, params, dp, tree = setup
+    for kw in ({}, {"prefill_chunk": 16}):
+        eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN, **kw)
+        reqs = _requests(serial_refs)
+        stats = eng.serve(reqs, max_batch=3)
+        assert len(stats.ttft_s) == len(reqs)
+        assert all(t >= 0 for t in stats.ttft_s)
+        assert len(stats.itl_s) == sum(len(r.output) - 1 for r in reqs)
+        assert stats.p99_itl_s >= 0.0 and stats.mean_ttft_s >= 0.0
+        for r in reqs:
+            assert r.ttft_s is not None and r.ttft_s <= r.latency_s
+
+
+def test_prefill_budget_validation(setup):
+    cfg, params, dp, tree = setup
+    with pytest.raises(ValueError, match="prefill_budget"):
+        SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                          prefill_chunk=16, prefill_budget=8)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                          prefill_chunk=-1)
+
+
+def test_prefill_budget_multiple_chunks_per_step(setup, serial_refs):
+    """budget = 2 chunks: the scheduler may co-schedule two chunks per
+    iteration — fewer loop iterations, same bytes."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                            prefill_chunk=8, prefill_budget=16)
+    reqs = _requests(serial_refs)
+    eng.serve(reqs, max_batch=3)
+    _assert_all_match(reqs, serial_refs, "budget=2 chunks")
+
+
+def test_source_exception_relays_and_parks_pulled_requests(setup):
+    """The feeder thread relays a source exception to the serve loop;
+    requests the feeder had already pulled from the caller's iterator
+    but the loop never served must be parked in the engine queue (not
+    silently dropped), so a later drain() still serves them."""
+    cfg, params, dp, tree = setup
+    rs = np.random.RandomState(5)
+
+    def source():
+        for _ in range(4):
+            yield Request(
+                prompt=rs.randint(0, cfg.vocab_size, 16).astype(np.int32),
+                max_new_tokens=6)
+        raise RuntimeError("upstream queue died")
+
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
+    with pytest.raises(RuntimeError, match="upstream queue died"):
+        eng.serve(source=source(), max_batch=2)
+    served = 4 - len(eng._queue)
+    assert len(eng._queue) + served == 4
+    eng.drain(max_batch=2)
+    assert len(eng._queue) == 0, "drain must serve the parked requests"
+
+
+def test_chunked_with_live_source(setup, serial_refs):
+    """Chunked prefill composes with the background-thread source feeder:
+    requests arriving mid-serve are chunk-prefilled and byte-match."""
+    cfg, params, dp, tree = setup
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                            prefill_chunk=16)
+    reqs = _requests(serial_refs)
+    head, tail = reqs[:2], reqs[2:]
+    remaining = list(tail)
+
+    def source():
+        if not remaining:
+            return None
+        if head[0].done:
+            out, remaining[:] = list(remaining), []
+            return out
+        return ()
+
+    eng.serve(head, source=source, max_batch=2)
+    _assert_all_match(reqs, serial_refs, "chunked live source")

@@ -212,8 +212,10 @@ def test_request_exceeding_cache_capacity_rejected(setup):
 
 def test_recurrent_arch_matches_serial_generate():
     """rwkv6: the active-masked state-group restore (commit_cache prev=)
-    and exact-length prefill (prefill_bucket forced to 1) must keep pooled
-    outputs byte-identical to serial generate()."""
+    and the length-masked BUCKETED prefill (recurrent archs no longer
+    force prefill_bucket=1 — the masked scan carries state past right-pad
+    unchanged, models/ssm.py) must keep pooled outputs byte-identical to
+    serial generate()."""
     from repro.launch.specs import tree_for
     cfg = dataclasses.replace(get_config("rwkv6-1.6b").reduced(),
                               dtype="float32")
@@ -228,11 +230,15 @@ def test_recurrent_arch_matches_serial_generate():
                         b)
             for n, b in zip(lens, buds)]
     eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN)
-    assert eng.prefill_bucket == 1            # recurrent => exact-length
+    # the bucket unlock: padded joins compile one join per BUCKET (not
+    # one per distinct prompt length) and stay byte-exact
+    assert eng.prefill_bucket == 32
     reqs = _requests(refs)
     eng.serve(reqs, max_batch=2)
     for r, (_, _, ref, _) in zip(reqs, refs):
         assert r.output == ref
+    assert eng._join_fn._cache_size() == 1, \
+        "three ragged prompts share one padded-join compile now"
 
 
 def test_eos_and_budget_in_same_pool(setup, serial_refs):

@@ -1,0 +1,111 @@
+"""The "MLA bucketed-prefill greedy divergence" (ROADMAP), pinned down.
+
+Diagnosis (2026-07, this test is the regression lock): the divergence was
+never MLA attention and never a near-tie argmax flip.  The reduced
+deepseek config routes through the fine-grained MoE, whose expert
+capacity used to be ``C = max(8, N*K*cf // E)`` with ``N`` the *static*
+token count of the trace — so the same prompt prefilled exact-length
+(serial ``generate``, N = P) vs bucket-padded (engine join, N = pad(P))
+computed different capacities.  Different capacity => different tokens
+overflow the expert buffers => a real token's routed contribution changes
+by a whole expert output: observed |Δlogits| up to ~0.5 against top-2
+gaps of ~1e-2 — far outside fusion jitter.  With MoE disabled the same
+padded-vs-exact comparison agrees to ~1e-6 with zero argmax flips, which
+acquits the MLA attention math.
+
+Fix: ``models/moe.py`` rounds the capacity basis up to ``CAPACITY_ROUND``
+(64), making C invariant to right-padding for every bucket that divides
+64; right-pad tokens rank after all real tokens in the capacity cumsum,
+so with equal C they can never displace a real token.  These tests lock
+both the mechanism (logit-level parity) and the end-to-end stream.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.heads import init_draft_params
+from repro.launch.specs import tree_for
+from repro.models.model import forward, init_cache, init_params
+from repro.serving.engine import SpeculativeEngine
+
+from test_engine_continuous import MAX_LEN, _requests, _serial_ref
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("deepseek-v2-lite-16b").reduced(),
+                              dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    return cfg, params
+
+
+def _last_real_logits(params, cfg, tokens, n):
+    out = forward(params, cfg, jnp.asarray(tokens)[None],
+                  jnp.arange(len(tokens))[None], mode="full",
+                  cache=init_cache(cfg, 1, 64), want_logits=False)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"])
+    return np.asarray(out.hidden[0, n - 1].astype(jnp.float32)
+                      @ unembed.astype(jnp.float32))
+
+
+def test_padded_prefill_matches_exact_logits(setup):
+    """The isolated repro: exact-length vs bucket-padded prefill of the
+    same prompt must agree at the last real position — same argmax, and
+    logit deltas at fp-jitter scale, not expert-output scale."""
+    cfg, params = setup
+    rs = np.random.RandomState(0)
+    for _ in range(8):
+        n = int(rs.randint(5, 30))
+        pad_to = -(-n // 32) * 32
+        prompt = rs.randint(0, cfg.vocab_size, n).astype(np.int32)
+        padded = np.zeros(pad_to, np.int32)
+        padded[:n] = prompt
+        l_exact = _last_real_logits(params, cfg, prompt, n)
+        l_pad = _last_real_logits(params, cfg, padded, n)
+        assert l_exact.argmax() == l_pad.argmax(), \
+            "padded prefill flipped the greedy token"
+        # pre-fix this was ~0.5 (a whole routed expert output); the fixed
+        # path leaves only reduction-order jitter
+        assert np.abs(l_exact - l_pad).max() < 1e-4
+
+
+def test_moe_capacity_is_pad_invariant():
+    """The mechanism itself: capacities computed for an exact length and
+    for any power-of-two bucket padding of it must be equal."""
+    from repro.models.moe import CAPACITY_ROUND
+
+    def cap(N, K=2, E=4, cf=1.25):
+        n_cap = -(-N // CAPACITY_ROUND) * CAPACITY_ROUND
+        return int(max(8, (n_cap * K * cf) // E))
+
+    for n in range(1, 200):
+        for bucket in (1, 2, 4, 8, 16, 32, 64):
+            padded = -(-n // bucket) * bucket
+            assert cap(n) == cap(padded), (n, bucket)
+
+
+def test_deepseek_bucketed_stream_matches_serial(setup):
+    """End to end: the continuous engine with bucketed prefill (the
+    configuration that used to diverge) byte-matches serial generate."""
+    cfg, params = setup
+    dp = init_draft_params(jax.random.fold_in(jax.random.PRNGKey(0), 1),
+                           cfg)
+    tree = tree_for(cfg)
+    rs = np.random.RandomState(0)
+    lens, buds = (12, 19, 25), (8, 10, 6)
+    refs = [_serial_ref(params, dp, cfg, tree,
+                        rs.randint(0, cfg.vocab_size, n).astype(np.int32),
+                        b)
+            for n, b in zip(lens, buds)]
+    eng = SpeculativeEngine(params, dp, cfg, tree, max_len=MAX_LEN,
+                            prefill_bucket=32)
+    reqs = _requests(refs)
+    eng.serve(reqs, max_batch=2)
+    for r, (_, _, ref, _) in zip(reqs, refs):
+        assert r.output == ref, "deepseek-MLA bucketed diverged from serial"
