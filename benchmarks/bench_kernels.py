@@ -21,6 +21,12 @@ paths at several pool occupancies:
            view (the pre-native paged path, now the parity oracle);
   paged  — native block-table kernel streaming the pool in place.
 
+``paged_decode_variants`` — the template-only paged decode groups
+(sliding-window and absorbed-MLA) native vs the gather fallback they
+retired; gated on the deterministic ``step_transient_tokens_*`` model
+(native must stay below fallback in the same run), parity max-err, and
+tolerance-gated latency proxies.
+
 The load-bearing column is ``transient_bytes``: the per-step K/V bytes a
 path materializes/moves on top of the persistent cache.  The shim's is
 the gathered view — ``max_batch × max_len``-shaped regardless of
@@ -40,6 +46,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
+from repro.kernels.attention_template.ops import (
+    mla_attention_paged_bshd, tree_attention_paged_windowed_bshd)
+from repro.kernels.attention_template.ref import (
+    mla_attention_paged_ref, tree_attention_paged_windowed_ref)
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.linear_attn_chunk.kernel import linear_attn_chunk
@@ -139,6 +149,87 @@ def tree_attention_paged_sweep(*, B=2, Hq=4, Hkv=2, D=64, T=16,
                 "step_transient_tokens_native": B * T,
                 "step_transient_tokens_shim": B * M * bs,
             })
+    return out
+
+
+def paged_decode_variants(*, B=2, Hq=4, Hkv=2, D=64, T=16,
+                          max_len=512, window=64) -> list:
+    """The two template-only paged decode groups — sliding-window
+    (gemma3-style) and absorbed-MLA (deepseek-style) — native kernel vs
+    the gather fallback those groups used before the template existed.
+
+    Gated columns: the deterministic engine transient model
+    (``step_transient_tokens_native`` = scratch writes only vs
+    ``..._fallback`` = the gathered dense view — the regression gate pins
+    both exactly AND that native < fallback in the same run), the parity
+    ``native_vs_fallback_max_err``, and the CPU latency proxies
+    (``native_us`` times the kernel in interpret mode, ``fallback_us``
+    the gather+softmax jnp path; tolerance-gated separately, never
+    cross-compared — interpret mode is not a speed claim)."""
+    key = jax.random.PRNGKey(2)
+    r = lambda i, s: jax.random.normal(jax.random.fold_in(key, i), s)
+    tm = jnp.tril(jnp.ones((T, T), bool))
+    out = []
+    for bs in (16, 128):
+        M = max_len // bs
+        num_blocks = 1 + B * M
+        lens = np.asarray([max_len // 3, max_len // 2], np.int64)[:B]
+        table = np.zeros((B, M), np.int32)
+        nxt = 1
+        for b in range(B):
+            for j in range(-(-int(lens[b] + T) // bs)):
+                table[b, j] = nxt
+                nxt += 1
+        lens_j = jnp.asarray(lens, jnp.int32)
+        table_j = jnp.asarray(table)
+        depth = jnp.arange(T, dtype=jnp.int32) % 4
+        q_pos = lens_j[:, None] + depth[None, :]
+
+        # sliding-window group
+        q = r(0, (B, T, Hq, D))
+        pk, pv = r(1, (num_blocks, bs, Hkv, D)), r(2, (num_blocks, bs,
+                                                       Hkv, D))
+        tk, tv = r(3, (B, T, Hkv, D)), r(4, (B, T, Hkv, D))
+        w = jnp.int32(window)
+        kernel = lambda a: tree_attention_paged_windowed_bshd(
+            a, pk, pv, tk, tv, tm, lens_j, table_j, q_pos, w,
+            interpret=True)
+        fallback = lambda a: tree_attention_paged_windowed_ref(
+            a.transpose(0, 2, 1, 3), pk, pv, tk.transpose(0, 2, 1, 3),
+            tv.transpose(0, 2, 1, 3), tm, lens_j, table_j, q_pos,
+            w).transpose(0, 2, 1, 3)
+        err = float(jnp.max(jnp.abs(kernel(q) - fallback(q))))
+        out.append({
+            "variant": "windowed", "block_size": bs, "B": B, "T": T,
+            "window": window, "max_len": max_len,
+            "native_vs_fallback_max_err": err,
+            "native_us": _timeit(kernel, q),
+            "fallback_us": _timeit(fallback, q),
+            "step_transient_tokens_native": B * T,
+            "step_transient_tokens_fallback": B * M * bs,
+        })
+
+        # absorbed-MLA group (reduced deepseek split: r=64, rd=16)
+        rlat, rd = 64, 16
+        ql, qr = r(5, (B, T, Hq, rlat)), r(6, (B, T, Hq, rd))
+        pl_, pr_ = r(7, (num_blocks, bs, rlat)), r(8, (num_blocks, bs, rd))
+        tl, trp = r(9, (B, T, rlat)), r(10, (B, T, rd))
+        scale = 1.0 / float(np.sqrt(32 + rd))
+        kernel = lambda a: mla_attention_paged_bshd(
+            a, qr, pl_, pr_, tl, trp, tm, lens_j, table_j, scale=scale,
+            interpret=True)
+        fallback = lambda a: mla_attention_paged_ref(
+            a, qr, pl_, pr_, tl, trp, tm, lens_j, table_j, scale=scale)
+        err = float(jnp.max(jnp.abs(kernel(ql) - fallback(ql))))
+        out.append({
+            "variant": "mla", "block_size": bs, "B": B, "T": T,
+            "window": 0, "max_len": max_len,
+            "native_vs_fallback_max_err": err,
+            "native_us": _timeit(kernel, ql),
+            "fallback_us": _timeit(fallback, ql),
+            "step_transient_tokens_native": B * T,
+            "step_transient_tokens_fallback": B * M * bs,
+        })
     return out
 
 
@@ -256,6 +347,18 @@ def run() -> list:
             f"shim_transient_bytes={s['shim_transient_bytes']};"
             f"paged_transient_bytes={s['paged_transient_bytes']}"))
 
+    # windowed + MLA paged decode: native template kernels vs the gather
+    # fallback they retired (gated: transient model + parity + latency)
+    variants = paged_decode_variants()
+    for s in variants:
+        rows.append(csv_row(
+            f"kernel_paged_{s['variant']}_bs{s['block_size']}",
+            s["fallback_us"],
+            f"native_vs_fallback_max_err={s['native_vs_fallback_max_err']:.2e};"
+            f"step_transient_tokens_native={s['step_transient_tokens_native']};"
+            f"step_transient_tokens_fallback="
+            f"{s['step_transient_tokens_fallback']}"))
+
     # long-prompt serving: TTFT + p99 inter-token latency, unchunked vs
     # chunked prefill (gated columns — see module docstring)
     serve_rows = serve_longprompt_bench()
@@ -270,6 +373,7 @@ def run() -> list:
     os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
     with open(RESULTS_JSON, "w") as f:
         json.dump({"tree_attention_paged_sweep": sweep,
+                   "paged_decode_variants": variants,
                    "serve_longprompt": serve_rows, "csv_rows": rows},
                   f, indent=2)
     print(f"wrote {os.path.normpath(RESULTS_JSON)}", flush=True)

@@ -18,8 +18,15 @@ job — when:
     deliberately generous: shared CI runners are noisy, and the gate is
     for order-of-magnitude rot (an accidental de-vectorization, a python
     loop on the hot path), not 10% jitter;
-  * **parity drifted**: ``paged_vs_dense_max_err`` above an absolute
-    ceiling (1e-3) — the paged kernel no longer computes the dense answer;
+  * **parity drifted**: ``paged_vs_dense_max_err`` (or the
+    ``paged_decode_variants`` section's ``native_vs_fallback_max_err``)
+    above an absolute ceiling (1e-3) — a native kernel no longer computes
+    its oracle's answer;
+  * the **windowed/MLA decode transient win inverted**: in the fresh run
+    itself, a ``paged_decode_variants`` row's
+    ``step_transient_tokens_native`` must stay strictly below its
+    ``step_transient_tokens_fallback`` — the whole point of serving those
+    groups natively;
   * a **serving responsiveness column** regressed past tolerance: the
     ``serve_longprompt`` section's ``ttft_ms`` / ``p99_itl_ms`` /
     ``us_per_tok`` per engine row (unchunked vs chunked prefill on the
@@ -44,6 +51,9 @@ TIMING_KEYS = ("dense_us", "shim_us", "paged_us")
 EXACT_KEYS = ("allocated_blocks", "shim_transient_bytes",
               "paged_transient_bytes", "step_transient_tokens_native",
               "step_transient_tokens_shim")
+VARIANT_TIMING_KEYS = ("native_us", "fallback_us")
+VARIANT_EXACT_KEYS = ("step_transient_tokens_native",
+                      "step_transient_tokens_fallback")
 SERVE_TIMING_KEYS = ("us_per_tok", "ttft_ms", "p99_itl_ms")
 # chunked rows must not INVERT the responsiveness win vs the unchunked
 # row of the SAME fresh run (absolute per-row drift alone can't catch
@@ -102,6 +112,42 @@ def compare(fresh: dict, baseline: dict, tol: float = DEFAULT_TOL) -> list:
         if err > MAX_ERR_CEILING:
             bad.append(f"{tag}.paged_vs_dense_max_err: {err:.2e} > "
                        f"{MAX_ERR_CEILING:g} (paged/dense parity broken)")
+
+    # windowed / MLA paged decode: the template groups must keep their
+    # native transient win over the retired gather fallback
+    fresh_var = {(e.get("variant"), e.get("block_size")): e
+                 for e in fresh.get("paged_decode_variants", [])}
+    for base in baseline.get("paged_decode_variants", []):
+        key = (base.get("variant"), base.get("block_size"))
+        tag = f"paged_decode[{key[0]},bs={key[1]}]"
+        cur = fresh_var.get(key)
+        if cur is None:
+            bad.append(f"{tag}: entry missing from fresh results "
+                       f"(decode-variant coverage shrank)")
+            continue
+        for k in VARIANT_EXACT_KEYS + VARIANT_TIMING_KEYS:
+            if k in base and k not in cur:
+                bad.append(f"{tag}.{k}: column missing from fresh results")
+        for k in VARIANT_EXACT_KEYS:
+            if k in base and k in cur and cur[k] > base[k]:
+                bad.append(f"{tag}.{k}: {cur[k]} > baseline {base[k]} "
+                           f"(deterministic transient model regressed)")
+        for k in VARIANT_TIMING_KEYS:
+            if k in base and base[k] > 0 and cur.get(k, 0.0) > base[k] * tol:
+                bad.append(f"{tag}.{k}: {cur[k]:.1f}us > baseline "
+                           f"{base[k]:.1f}us x tol {tol:g}")
+        err = cur.get("native_vs_fallback_max_err", 0.0)
+        if err > MAX_ERR_CEILING:
+            bad.append(f"{tag}.native_vs_fallback_max_err: {err:.2e} > "
+                       f"{MAX_ERR_CEILING:g} (native/fallback parity "
+                       f"broken)")
+        # same-run: native streams scratch only; the moment it stops
+        # shrinking the transient footprint the template lost its point
+        nat = cur.get("step_transient_tokens_native")
+        fb = cur.get("step_transient_tokens_fallback")
+        if nat is not None and fb is not None and not nat < fb:
+            bad.append(f"{tag}: step_transient_tokens_native {nat} not "
+                       f"below fallback {fb} (native transient win lost)")
 
     fresh_serve = {e.get("name"): e
                    for e in fresh.get("serve_longprompt", [])}

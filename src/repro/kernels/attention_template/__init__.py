@@ -1,0 +1,9 @@
+"""The parameterized attention template (DESIGN.md §11): one Pallas
+online-softmax kernel, specialized per variant by a static TemplateSpec.
+All four legacy attention paths — dense flash, dense tree, paged tree,
+and the windowed/MLA fallbacks — are instantiations of this package."""
+from repro.kernels.attention_template.kernel import (  # noqa: F401
+    NEG_INF, NULL_BLOCK, TemplateSpec, self_attention,
+    tree_attention_template)
+from repro.kernels.attention_template.ops import (  # noqa: F401
+    mla_attention_paged_bshd, tree_attention_paged_windowed_bshd)

@@ -1,108 +1,34 @@
 """Pallas TPU flash attention (prefill): causal + optional sliding window.
 
-Layout: q (B, Hq, S, D); k/v (B, Hkv, S, D); GQA folded via head index map.
-Grid: (B, Hq, S/bq, S/bk) — the kv-block axis is innermost and 'arbitrary'
-(sequential), carrying the online-softmax state in VMEM scratch.
+Since the attention-template refactor (DESIGN.md §11) this is a thin
+instantiation of ``kernels/attention_template`` (self family): layout
+q (B, Hq, S, D); k/v (B, Hkv, S, D); GQA folded via the head index map;
+grid (B, Hq, S/bq, S/bk) with the kv-block axis innermost and sequential,
+carrying the online-softmax state in VMEM scratch.
 
-BlockSpec tiling keeps the working set in VMEM:
-  q tile (bq, D) + k/v tiles (bk, D) + acc (bq, D) fp32 + logits (bq, bk)
-  with bq=bk=128, D<=256: ~128*256*4*4B ≈ 0.5 MiB « 16 MiB VMEM/core.
-MXU alignment: bq, bk multiples of 128 (sublane×lane = 8×128 for fp32).
+Default block sizes come from the committed autotuner winner cache
+(``results/autotune.<backend>.json``, key ``flash|hd=<D>``); pass
+explicit ``bq``/``bk`` to pin them.  Sizes that don't tile S are
+legalized by pad-or-clamp instead of asserting.
 """
 from __future__ import annotations
 
-import functools
+from repro.kernels import tuned_block_sizes
+from repro.kernels.attention_template.kernel import (NEG_INF,  # noqa: F401
+                                                     self_attention)
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.kernels import resolve_interpret, tpu_compiler_params
-
-NEG_INF = -1e30
+_DEFAULTS = {"bq": 128, "bk": 128}
 
 
-def _flash_body(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
-                bq: int, bk: int, scale: float, window: int, causal: bool,
-                n_kb: int):
-    qi = pl.program_id(2)
-    ki = pl.program_id(3)
-
-    @pl.when(ki == 0)
-    def _init():
-        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
-        l_sc[...] = jnp.zeros_like(l_sc)
-        acc_sc[...] = jnp.zeros_like(acc_sc)
-
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
-    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
-    v = v_ref[0, 0].astype(jnp.float32)
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
-
-    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = jnp.ones((bq, bk), jnp.bool_)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window > 0:
-        mask &= (q_pos - k_pos) < window
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_sc[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    p = jnp.where(mask, p, 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_sc[...] = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
-    acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())))
-    m_sc[...] = m_new
-
-    @pl.when(ki == n_kb - 1)
-    def _finish():
-        denom = jnp.maximum(l_sc[...], 1e-30)
-        o_ref[0, 0] = (acc_sc[...] / denom).astype(o_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
-                                             "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    bq: int = 128, bk: int = 128,
+                    bq: int | None = None, bk: int | None = None,
                     interpret: bool | None = None):
     """q: (B,Hq,S,D); k/v: (B,Hkv,S,D). Returns (B,Hq,S,D).
+    bq/bk: None => autotuned winner for this head dim (or 128).
     interpret: None => auto (compile on TPU, interpret elsewhere)."""
-    interpret = resolve_interpret(interpret)
-    B, Hq, S, D = q.shape
-    Hkv = k.shape[1]
-    G = Hq // Hkv
-    bq = min(bq, S)
-    bk = min(bk, S)
-    assert S % bq == 0 and S % bk == 0
-    n_qb, n_kb = S // bq, S // bk
-    scale = 1.0 / (D ** 0.5)
-
-    grid = (B, Hq, n_qb, n_kb)
-    body = functools.partial(_flash_body, bq=bq, bk=bk, scale=scale,
-                             window=window, causal=causal, n_kb=n_kb)
-    return pl.pallas_call(
-        body,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, D), jnp.float32),
-        ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
-        interpret=interpret,
-    )(q, k, v)
+    if bq is None or bk is None:
+        tuned = tuned_block_sizes("flash", q.shape[-1], defaults=_DEFAULTS)
+        bq = tuned["bq"] if bq is None else bq
+        bk = tuned["bk"] if bk is None else bk
+    return self_attention(q, k, v, causal=causal, window=window, bq=bq,
+                          bk=bk, interpret=interpret)

@@ -1,18 +1,24 @@
 """Pallas TPU tree-verification attention — the Medusa/Hydra hot-spot.
 
-One speculative step verifies T candidate-tree tokens against a KV cache of
-length `cache_len` plus the tree tokens themselves under an ancestor mask.
+One speculative step verifies T candidate-tree tokens against a KV cache
+of length `cache_len` plus the tree tokens themselves under an ancestor
+mask.  Since the attention-template refactor (DESIGN.md §11) both entry
+points here are thin instantiations of ``kernels/attention_template``
+(tree family); the windowed and MLA variants live in
+``kernels/attention_template/ops.py``.
 
 TPU-native design (vs the GPU approach of materializing a (T, S) additive
 mask): the cache sweep is mask-free except for a per-block validity clamp
 (k_pos < cache_len, via scalar prefetch), streamed HBM->VMEM in bk-sized
-blocks with online softmax; the static (T, T) ancestor mask only touches the
-final grid step. MXU alignment: bk multiple of 128; T is padded by ops.py.
+blocks with online softmax; the static (T, T) ancestor mask only touches
+the final grid step.
 
 Two cache layouts share the same sweep:
 
 * ``tree_attention``      — dense per-slot cache ``(B, Hkv, S, D)``; the
-  grid's cache axis walks S in ``bk``-sized strips.
+  grid's cache axis walks S in ``bk``-sized strips.  ``bk=None`` takes
+  the autotuned winner (key ``tree_dense|hd=<D>``); sizes that don't
+  tile S are legalized by pad-or-clamp instead of asserting.
 * ``tree_attention_paged`` — vLLM-style global block pool
   ``(num_blocks, block_size, Hkv, D)`` plus a per-slot block table
   ``(B, M)``; the grid's cache axis walks *table entries*, each index map
@@ -22,169 +28,38 @@ Two cache layouts share the same sweep:
   ragged early-exit for short slots; runs of skipped entries all map to
   block 0, so Mosaic's revisit elision drops their copies after the first.
   The cache tile here is the ALLOCATOR's ``block_size`` (sublane axis:
-  must be a multiple of 8, asserted; compiled TPU runs want 128+ for full
-  MXU tiles — the engine's CPU-test default of 16 is interpret-mode fare).
+  must be a multiple of 8 — ValueError otherwise; compiled TPU runs want
+  128+ for full MXU tiles — the engine's CPU-test default of 16 is
+  interpret-mode fare).
 
 Grid: (B, Hq, n_cache_blocks + 1), innermost 'arbitrary' (sequential).
 """
 from __future__ import annotations
 
-import functools
+from repro.kernels import tuned_block_sizes
+from repro.kernels.attention_template.kernel import (  # noqa: F401
+    NEG_INF, NULL_BLOCK, TemplateSpec, _init_scratch, _softmax_update,
+    tree_attention_template)
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.kernels import resolve_interpret, tpu_compiler_params
-
-NEG_INF = -1e30
-NULL_BLOCK = 0   # physical pool block 0 is reserved; never read unmasked
+_DENSE_DEFAULTS = {"bk": 512}
 
 
-def _init_scratch(m_sc, l_sc, acc_sc):
-    m_sc[...] = jnp.full_like(m_sc, NEG_INF)
-    l_sc[...] = jnp.zeros_like(l_sc)
-    acc_sc[...] = jnp.zeros_like(acc_sc)
-
-
-def _softmax_update(q, k, v, mask, m_sc, l_sc, acc_sc):
-    """One online-softmax accumulation of (k, v) under ``mask`` — shared
-    verbatim by the dense and paged bodies so their numerics can never
-    desynchronize (the parity tests assert bit-compatibility)."""
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (T, bk|T)
-    s = jnp.where(mask, s, NEG_INF)
-    m_prev = m_sc[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_sc[...] = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
-    acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())))
-    m_sc[...] = m_new
-
-
-def _tree_finish(q, tk_ref, tv_ref, tm_ref, o_ref, m_sc, l_sc, acc_sc):
-    """Final grid step: fold in the T tree tokens under the ancestor-or-
-    self mask and write the normalized output."""
-    k = tk_ref[0, 0].astype(jnp.float32)                     # (T, D)
-    v = tv_ref[0, 0].astype(jnp.float32)
-    _softmax_update(q, k, v, tm_ref[...], m_sc, l_sc, acc_sc)
-    o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
-                   ).astype(o_ref.dtype)
-
-
-def _tree_body(lens_ref, q_ref, ck_ref, cv_ref, tk_ref, tv_ref, tm_ref,
-               o_ref, m_sc, l_sc, acc_sc, *, bk: int, scale: float,
-               n_kb: int, T: int):
-    b = pl.program_id(0)
-    ki = pl.program_id(2)
-    cache_len = lens_ref[b]
-
-    @pl.when(ki == 0)
-    def _init():
-        _init_scratch(m_sc, l_sc, acc_sc)
-
-    q = q_ref[0, 0].astype(jnp.float32) * scale              # (T, D)
-
-    @pl.when(jnp.logical_and(ki < n_kb, ki * bk < cache_len))
-    def _cache_step():
-        k = ck_ref[0, 0].astype(jnp.float32)                 # (bk, D)
-        v = cv_ref[0, 0].astype(jnp.float32)
-        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (T, bk), 1)
-        _softmax_update(q, k, v, k_pos < cache_len, m_sc, l_sc, acc_sc)
-
-    @pl.when(ki == n_kb)
-    def _tree_step():
-        _tree_finish(q, tk_ref, tv_ref, tm_ref, o_ref, m_sc, l_sc, acc_sc)
-
-
-@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
 def tree_attention(q, cache_k, cache_v, tree_k, tree_v, tree_mask, cache_len,
-                   *, bk: int = 512, interpret: bool | None = None):
+                   *, bk: int | None = None, interpret: bool | None = None):
     """q: (B,Hq,T,D); cache_k/v: (B,Hkv,S,D); tree_k/v: (B,Hkv,T,D);
     tree_mask: (T,T) bool ancestor-or-self; cache_len: (B,) int32.
+    bk: None => autotuned winner for this head dim (or 512).
     interpret: None => auto (compile on TPU, interpret elsewhere).
     Returns (B,Hq,T,D)."""
-    interpret = resolve_interpret(interpret)
-    B, Hq, T, D = q.shape
-    Hkv, S = cache_k.shape[1], cache_k.shape[2]
-    G = Hq // Hkv
-    bk = min(bk, S)
-    assert S % bk == 0
-    n_kb = S // bk
-    scale = 1.0 / (D ** 0.5)
-
-    body = functools.partial(_tree_body, bk=bk, scale=scale, n_kb=n_kb, T=T)
-    grid = (B, Hq, n_kb + 1)
-    clamp = lambda j: jnp.minimum(j, n_kb - 1)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, T, D), lambda b, h, j, lens: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bk, D),
-                         lambda b, h, j, lens: (b, h // G, clamp(j), 0)),
-            pl.BlockSpec((1, 1, bk, D),
-                         lambda b, h, j, lens: (b, h // G, clamp(j), 0)),
-            pl.BlockSpec((1, 1, T, D), lambda b, h, j, lens: (b, h // G, 0, 0)),
-            pl.BlockSpec((1, 1, T, D), lambda b, h, j, lens: (b, h // G, 0, 0)),
-            pl.BlockSpec((T, T), lambda b, h, j, lens: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, T, D), lambda b, h, j, lens: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((T, 1), jnp.float32),
-            pltpu.VMEM((T, 1), jnp.float32),
-            pltpu.VMEM((T, D), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        body,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(cache_len, q, cache_k, cache_v, tree_k, tree_v, tree_mask)
+    if bk is None:
+        bk = tuned_block_sizes("tree_dense", q.shape[-1],
+                               defaults=_DENSE_DEFAULTS)["bk"]
+    return tree_attention_template(
+        q, cache_k, cache_v, tree_k, tree_v, tree_mask, cache_len,
+        spec=TemplateSpec(kind="tree", layout="dense"), bk=bk,
+        interpret=interpret)
 
 
-# ---------------------------------------------------------------------------
-# block-table-aware variant: stream K/V straight from the global pool
-# ---------------------------------------------------------------------------
-
-
-def _tree_paged_body(lens_ref, table_ref, q_ref, pk_ref, pv_ref, tk_ref,
-                     tv_ref, tm_ref, o_ref, m_sc, l_sc, acc_sc, *, bs: int,
-                     scale: float, M: int, T: int):
-    b = pl.program_id(0)
-    j = pl.program_id(2)
-    cache_len = lens_ref[b]
-
-    @pl.when(j == 0)
-    def _init():
-        _init_scratch(m_sc, l_sc, acc_sc)
-
-    q = q_ref[0, 0].astype(jnp.float32) * scale              # (T, D)
-
-    # Logical token-block j of slot b: skip the whole grid step when the
-    # table entry is a NULL hole or lies entirely past cache_len (ragged
-    # early-exit — a short slot pays only for the blocks it committed).
-    entry = table_ref[b, jnp.minimum(j, M - 1)]
-    in_cache = jnp.logical_and(j < M, j * bs < cache_len)
-
-    @pl.when(jnp.logical_and(in_cache, entry != NULL_BLOCK))
-    def _cache_step():
-        k = pk_ref[0, :, 0].astype(jnp.float32)              # (bs, D)
-        v = pv_ref[0, :, 0].astype(jnp.float32)
-        k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (T, bs), 1)
-        _softmax_update(q, k, v, k_pos < cache_len, m_sc, l_sc, acc_sc)
-
-    @pl.when(j == M)
-    def _tree_step():
-        _tree_finish(q, tk_ref, tv_ref, tm_ref, o_ref, m_sc, l_sc, acc_sc)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def tree_attention_paged(q, pool_k, pool_v, tree_k, tree_v, tree_mask,
                          cache_len, block_table, *,
                          interpret: bool | None = None):
@@ -205,52 +80,8 @@ def tree_attention_paged(q, pool_k, pool_v, tree_k, tree_v, tree_mask,
     NULL entries (holes or the unallocated tail) are compute-skipped and
     their contents can never reach the output.
     """
-    interpret = resolve_interpret(interpret)
-    B, Hq, T, D = q.shape
-    bs, Hkv = pool_k.shape[1], pool_k.shape[2]
-    M = block_table.shape[1]
-    G = Hq // Hkv
-    # the allocator's block_size IS the K/V tile's sublane extent: 8 is
-    # the f32 tiling floor; sizes < 128 compile but waste MXU lanes
-    assert bs % 8 == 0, f"pool block_size {bs} must be a multiple of 8"
-    scale = 1.0 / (D ** 0.5)
-
-    body = functools.partial(_tree_paged_body, bs=bs, scale=scale, M=M, T=T)
-    grid = (B, Hq, M + 1)
-    # j == M is the tree step: clamp its pool index map to the last table
-    # entry (the fetched block is ignored there).
-    clamp = lambda j: jnp.minimum(j, M - 1)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, T, D),
-                         lambda b, h, j, lens, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, lens, tbl:
-                         (tbl[b, clamp(j)], 0, h // G, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, lens, tbl:
-                         (tbl[b, clamp(j)], 0, h // G, 0)),
-            pl.BlockSpec((1, 1, T, D),
-                         lambda b, h, j, lens, tbl: (b, h // G, 0, 0)),
-            pl.BlockSpec((1, 1, T, D),
-                         lambda b, h, j, lens, tbl: (b, h // G, 0, 0)),
-            pl.BlockSpec((T, T), lambda b, h, j, lens, tbl: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, T, D),
-                               lambda b, h, j, lens, tbl: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((T, 1), jnp.float32),
-            pltpu.VMEM((T, 1), jnp.float32),
-            pltpu.VMEM((T, D), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        body,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(cache_len, block_table, q, pool_k, pool_v, tree_k, tree_v, tree_mask)
+    return tree_attention_template(
+        q, pool_k, pool_v, tree_k, tree_v, tree_mask, cache_len,
+        block_table=block_table,
+        spec=TemplateSpec(kind="tree", layout="paged"),
+        interpret=interpret)

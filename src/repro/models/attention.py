@@ -29,11 +29,16 @@ The verify path speaks two cache layouts (DESIGN.md §6):
   ``(num_blocks, block_size, ...)`` and ``block_table`` (B, M) maps each
   slot's logical token-blocks to physical pool blocks.  New K/V scatter
   through the table at token granularity (O(B·T), no dense transient) and
-  attention streams pool blocks natively via the
-  ``tree_attention_paged`` Pallas kernel.  Layers the kernel doesn't
-  cover (sliding-window groups, MLA's absorbed latent math) fall back to
-  a per-layer table gather — a one-layer-at-a-time transient, never the
-  all-layer dense view the old gather/scatter shim materialized.
+  attention streams pool blocks natively through the attention-template
+  instantiations (DESIGN.md §11): ``tree_attention_paged_bshd`` for
+  full-attention GQA groups, ``tree_attention_paged_windowed_bshd`` for
+  groups with sliding-window layers (the window rides as a traced
+  scalar, so one kernel serves a group mixing local and global layers),
+  and ``mla_attention_paged_bshd`` for MLA's absorbed latent math.
+  Every group runs native; the per-layer table gather
+  (``_paged_gather_layer``) survives only off the steady state — the
+  chunked-prefill continuation (full-seq math over the cache view) and
+  the ``paged_kernel=False`` test-oracle branch.
 
 Param pytrees use a stacked leading layer axis when scanned.
 """
@@ -45,6 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.attention_template.ops import (
+    mla_attention_paged_bshd, tree_attention_paged_windowed_bshd)
 from repro.kernels.tree_attention.ops import tree_attention_paged_bshd
 from repro.models.layers import (apply_rope, blocked_attention, dense_init,
                                  masked_attention, rope_sincos)
@@ -61,8 +68,12 @@ class AttnInputs(NamedTuple):
     window: jnp.ndarray | int          # 0 => full attention
     causal: bool
     block_table: Optional[jnp.ndarray] = None   # (B, M) int32 => pool layout
-    paged_kernel: bool = True          # static: False forces the jnp
-    #                                    fallback (windowed groups)
+    paged_kernel: bool = True          # static: False forces the jnp gather
+    #                                    fallback — TEST ORACLE only, no
+    #                                    steady-state caller sets it
+    windowed: bool = False             # static: group has sliding-window
+    #                                    layers => windowed template variant
+    #                                    (traced window + q_pos operands)
     prefill: bool = False              # static: cache + prefill => chunked
     #                                    prefill continuation (full-seq math)
 
@@ -214,10 +225,13 @@ def _paged_gather_layer(pool, table):
 def _paged_verify_gqa(q, k, v, ai: AttnInputs):
     """Pool-layout verify for GQA: persist the T new K/V through the block
     table (token-granular scatter — the only writes of the step), then
-    attend with the native paged kernel.  Groups with sliding-window
-    layers (ai.paged_kernel False) take the jnp fallback: a per-layer
-    table gather feeding the same masked attention the dense path uses —
-    transient O(B·M·bs) for ONE layer, not the all-layer shim view."""
+    attend with the native paged template.  Groups with sliding-window
+    layers (``ai.windowed``) take the windowed instantiation — the window
+    is a traced per-layer scan operand, so the SAME compiled kernel
+    serves a group mixing local and global layers (a <= 0 window is an
+    exact mask no-op).  ``ai.paged_kernel=False`` is the test-oracle
+    path: a per-layer table gather feeding the same masked attention the
+    dense path uses; no steady-state caller sets it."""
     pool_k, pool_v, table = ai.cache_k, ai.cache_v, ai.block_table
     B, T = q.shape[:2]
     npk = _paged_scatter(pool_k, k, ai.cache_len, table)
@@ -225,8 +239,13 @@ def _paged_verify_gqa(q, k, v, ai: AttnInputs):
     if ai.paged_kernel:
         tm = (ai.tree_mask if ai.tree_mask is not None
               else jnp.tril(jnp.ones((T, T), bool)))
-        out = tree_attention_paged_bshd(q, npk, npv, k, v, tm,
-                                        ai.cache_len, table)
+        if ai.windowed:
+            out = tree_attention_paged_windowed_bshd(
+                q, npk, npv, k, v, tm, ai.cache_len, table, ai.q_pos,
+                jnp.asarray(ai.window, jnp.int32))
+        else:
+            out = tree_attention_paged_bshd(q, npk, npv, k, v, tm,
+                                            ai.cache_len, table)
     else:
         ck, covered = _paged_gather_layer(npk, table)
         cv, _ = _paged_gather_layer(npv, table)
@@ -337,13 +356,32 @@ def mla_fwd(p, cfg, x, ai: AttnInputs):
 
     # decode/verify: absorbed attention against the latent cache
     if ai.block_table is not None:
-        # paged fallback (DESIGN.md §6.6): absorbed MLA scores against the
-        # latent directly — no (Hkv, D)-shaped K/V for the paged kernel to
-        # stream — so gather THIS layer's latent view through the table
-        # (one-layer transient), after scattering the T new latents in.
+        # paged: scatter the T new latents through the table, then score
+        # absorbed — q' = q_nope @ W_uk per head against the latent
+        # stream directly.  The native MLA template instantiation
+        # (DESIGN.md §11) streams the latent + rope pools as the K
+        # concat and the latent as V, returning o_lat; only the
+        # ``paged_kernel=False`` test oracle still gathers a dense view.
         table = ai.block_table
         new_k = _paged_scatter(ai.cache_k, c_kv, ai.cache_len, table)
         new_v = _paged_scatter(ai.cache_v, k_rope, ai.cache_len, table)
+        if ai.paged_kernel:
+            w_uk = p["w_uk"].reshape(r, H, nd)
+            q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                               w_uk.astype(jnp.float32))     # (B,T,H,r)
+            tm = (ai.tree_mask if ai.tree_mask is not None
+                  else jnp.tril(jnp.ones((T, T), bool)))
+            o_lat = mla_attention_paged_bshd(
+                q_lat, q_rope.astype(jnp.float32), new_k, new_v, c_kv,
+                k_rope, tm, ai.cache_len, table, scale=scale,
+                q_pos=ai.q_pos if ai.windowed else None,
+                window=(jnp.asarray(ai.window, jnp.int32)
+                        if ai.windowed else None))
+            w_uv = p["w_uv"].reshape(r, H, vd)
+            out = jnp.einsum("bthr,rhv->bthv", o_lat,
+                             w_uv.astype(jnp.float32))
+            out = out.reshape(B, T, H * vd).astype(x.dtype)
+            return out @ p["wo"], new_k, new_v
         ckv_all, covered = _paged_gather_layer(new_k, table)
         krope_all, _ = _paged_gather_layer(new_v, table)
         mask = _verify_mask(ai, B, T, ckv_all.shape[1]) & covered[:, None, :]

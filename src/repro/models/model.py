@@ -218,16 +218,26 @@ def _window_array(cfg, n_layers, offset=0):
 
 def paged_kernel_covers(cfg: ModelConfig, offset: int = 0,
                         n: Optional[int] = None) -> bool:
-    """True when the native paged tree-attention kernel covers layers
-    ``[offset, offset + n)`` (default: the whole model) — i.e. none of
-    them takes the per-layer gather fallback.  MLA's absorbed-latent math
-    and sliding-window layers fall back.  THE single source of truth for
-    this dispatch: ``forward`` keys each scan group's path off it, and
-    the paged engine keys its transient-memory accounting off the
-    whole-model answer (serving/engine.py)."""
-    n = cfg.n_layers if n is None else n
-    return cfg.mla is None and all(
-        cfg.window_for_layer(offset + i) == 0 for i in range(n))
+    """True when the native paged attention-template instantiations cover
+    layers ``[offset, offset + n)`` (default: the whole model) — i.e.
+    none of them takes the per-layer gather fallback.  Since the
+    attention-template refactor (DESIGN.md §11) that is EVERY layer:
+    sliding-window groups run the windowed instantiation (the window is
+    a traced operand) and MLA runs the absorbed-latent instantiation, so
+    this is identically True.  Kept as the single source of truth the
+    paged engine keys its transient-memory accounting off
+    (serving/engine.py) — and as the seam a future variant outside the
+    template's reach would reopen."""
+    del cfg, offset, n
+    return True
+
+
+def group_has_window(cfg: ModelConfig, offset: int, n: int) -> bool:
+    """True when any layer in ``[offset, offset + n)`` is sliding-window:
+    the group's verify path then takes the windowed template variant
+    (window rides as a traced scan operand; 0 is an exact mask no-op for
+    the group's global layers)."""
+    return any(cfg.window_for_layer(offset + i) > 0 for i in range(n))
 
 
 # ---------------------------------------------------------------------------
@@ -296,12 +306,13 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
         if kind.startswith("attn_stack"):
             moe_ffn = kind.endswith("moe")
             windows = _window_array(cfg, n, layer_offset)
-            # static dispatch: the paged Pallas kernel covers full-attention
-            # GQA groups; windowed groups take the per-layer jnp fallback
-            # (window is a traced scan operand, so this must be decided per
-            # GROUP at trace time, and a group mixing local+global layers —
-            # e.g. gemma3's 5:1 pattern — falls back as a whole).
-            pk_ok = paged_kernel_covers(cfg, layer_offset, n)
+            # static dispatch: every group runs a native paged template
+            # instantiation; groups with sliding-window layers take the
+            # WINDOWED variant (window is a traced scan operand, so the
+            # choice is per GROUP at trace time — one compiled kernel
+            # serves a group mixing local+global layers, e.g. gemma3's
+            # 5:1 pattern, with window 0 an exact mask no-op).
+            win_group = group_has_window(cfg, layer_offset, n)
 
             def body(carry, xs):
                 h, aux = carry
@@ -312,7 +323,7 @@ def forward(params, cfg: ModelConfig, inputs, positions, *, mode: str = "full",
                     tree_mask=tree_mask if is_verify else None,
                     window=win, causal=causal,
                     block_table=block_table,
-                    paged_kernel=pk_ok, prefill=is_chunk)
+                    windowed=win_group, prefill=is_chunk)
                 h, nk, nv, aux_l = _attn_layer_fwd(lp, cfg, h, ai, moe_ffn)
                 return (h, aux + aux_l), (nk, nv)
 

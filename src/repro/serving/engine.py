@@ -1350,9 +1350,11 @@ class PagedSpeculativeEngine(SpeculativeEngine):
         st.num_blocks = nb
         st.pool_tokens = (nb - 1) * self.block_size
         st.dense_equiv_tokens = max_batch * self.max_len
-        # windowed groups and MLA take the per-layer gather fallback even
-        # under "native" (models/model.py dispatch): their transient is one
-        # layer's logical view, not just the scratch writes — report it
+        # under "native" every group — full-attention, sliding-window and
+        # MLA alike — streams the pool through an attention-template
+        # instantiation (models/model.py dispatch), so the step transient
+        # is just the scratch writes; only the "shim" oracle still
+        # materializes the per-slot logical view
         st.step_transient_tokens = max_batch * (
             self._scratch
             if self.paged_attention == "native"

@@ -33,6 +33,18 @@ def _doc():
              "step_transient_tokens_native": 32,
              "step_transient_tokens_shim": 1024},
         ],
+        "paged_decode_variants": [
+            {"variant": "windowed", "block_size": 16, "B": 2, "T": 16,
+             "native_vs_fallback_max_err": 3e-7,
+             "native_us": 12000.0, "fallback_us": 9000.0,
+             "step_transient_tokens_native": 32,
+             "step_transient_tokens_fallback": 1024},
+            {"variant": "mla", "block_size": 16, "B": 2, "T": 16,
+             "native_vs_fallback_max_err": 1e-6,
+             "native_us": 9000.0, "fallback_us": 8000.0,
+             "step_transient_tokens_native": 32,
+             "step_transient_tokens_fallback": 1024},
+        ],
         "serve_longprompt": [
             {"name": "unchunked", "us_per_tok": 900.0, "tok_per_s": 1100.0,
              "ttft_ms": 250.0, "p99_ttft_ms": 400.0, "p99_itl_ms": 90.0,
@@ -187,6 +199,45 @@ def test_cli_exit_codes(tmp_path):
     assert gate.main([str(fresh_bad), str(base)]) == 0
 
 
+def test_decode_variant_transient_growth_trips():
+    fresh = _doc()
+    fresh["paged_decode_variants"][0]["step_transient_tokens_native"] = 64
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert any("paged_decode[windowed,bs=16]" in b and
+               "step_transient_tokens_native" in b for b in bad)
+
+
+def test_decode_variant_inversion_trips_same_run():
+    """Native no longer below fallback in the FRESH run itself — even if
+    the baseline also carried the inverted numbers, the gate trips."""
+    fresh, base = _doc(), _doc()
+    for doc in (fresh, base):
+        row = doc["paged_decode_variants"][1]
+        row["step_transient_tokens_native"] = 1024
+        row["step_transient_tokens_fallback"] = 1024
+    bad = gate.compare(fresh, base, tol=3.0)
+    assert any("paged_decode[mla,bs=16]" in b and
+               "transient win lost" in b for b in bad)
+
+
+def test_decode_variant_parity_drift_trips():
+    fresh = _doc()
+    fresh["paged_decode_variants"][0]["native_vs_fallback_max_err"] = 5e-3
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert any("native_vs_fallback_max_err" in b for b in bad)
+
+
+def test_decode_variant_row_or_column_missing_trips():
+    fresh = _doc()
+    del fresh["paged_decode_variants"][1]["native_us"]
+    fresh["paged_decode_variants"] = fresh["paged_decode_variants"][1:]
+    bad = gate.compare(fresh, _doc(), tol=3.0)
+    assert any("paged_decode[windowed,bs=16]: entry missing" in b
+               for b in bad)
+    assert any("paged_decode[mla,bs=16].native_us: column missing" in b
+               for b in bad)
+
+
 def test_committed_baseline_has_gate_fields():
     """The baseline CI compares against must carry every column the gate
     reads — otherwise the gate silently checks nothing."""
@@ -208,3 +259,12 @@ def test_committed_baseline_has_gate_fields():
     for e in serve:
         for k in gate.SERVE_TIMING_KEYS:
             assert k in e, f"baseline serve row missing {k}"
+    variants = doc["paged_decode_variants"]
+    assert {(e["variant"], e["block_size"]) for e in variants} >= {
+        ("windowed", 16), ("windowed", 128), ("mla", 16), ("mla", 128)}
+    for e in variants:
+        for k in gate.VARIANT_EXACT_KEYS + gate.VARIANT_TIMING_KEYS + (
+                "native_vs_fallback_max_err",):
+            assert k in e, f"baseline decode-variant row missing {k}"
+        assert e["step_transient_tokens_native"] < \
+            e["step_transient_tokens_fallback"]
